@@ -1,0 +1,47 @@
+"""Kernel microbenchmark: the grouped expert FFN (jnp reference executed
+on CPU — wall time here is NOT TPU perf; the roofline module carries the
+TPU projection). Reports us/call + analytic MXU utilisation targets."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+PEAK_FLOPS = 197e12
+
+
+def bench(e, c, d, f, iters=5):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (e, c, d), jnp.float32)
+    wg = jax.random.normal(ks[1], (e, d, f), jnp.float32) * 0.1
+    wu = jax.random.normal(ks[2], (e, d, f), jnp.float32) * 0.1
+    wd = jax.random.normal(ks[3], (e, f, d), jnp.float32) * 0.1
+    gs = jnp.full((e,), c, jnp.int32)
+    out = ops.expert_ffn(x, wg, wu, wd, gs, impl="ref")
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = ops.expert_ffn(x, wg, wu, wd, gs, impl="ref")
+        out.block_until_ready()
+    dt = (time.perf_counter() - t0) / iters
+    flops = 6 * e * c * d * f
+    return dt * 1e6, flops / PEAK_FLOPS * 1e6
+
+
+def main():
+    rows = []
+    for e, c, d, f in [(8, 128, 512, 1792), (16, 256, 512, 800),
+                       (8, 512, 1024, 3584)]:
+        us, tpu_us = bench(e, c, d, f)
+        rows.append((f"kernel/expert_ffn_e{e}c{c}d{d}f{f}", us,
+                     f"tpu_roofline={tpu_us:.1f}us"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.3f},{derived}")

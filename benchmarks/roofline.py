@@ -1,0 +1,162 @@
+"""Roofline analysis (deliverable g): per (arch x shape x mesh), derive
+
+  compute term    = FLOPs / (chips x 197 TFLOP/s bf16)
+  memory term     = HBM bytes / (chips x 819 GB/s)
+  collective term = collective bytes / (chip link x 50 GB/s)
+
+FLOPs/bytes use analytic workload formulas (documented below); the
+compiled dry-run supplies per-device HLO collective bytes and peak memory.
+HLO FLOPs are also reported with a trip-count correction: XLA's
+cost_analysis counts a while-loop body ONCE, so anything inside the layer
+scan (and the microbatch scan) is multiplied by the known trip counts.
+Nested scans (attention KV chunks, recurrent time steps) keep a residual
+undercount in the HLO column only — the analytic column is exact.
+
+MODEL_FLOPS = 6 N D (train) / 2 N D (inference) with N = active params;
+the ratio MODEL_FLOPS / HLO_FLOPS flags remat/dispatch overhead.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.models import model as M
+from repro.models import transformer as T
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_BYTES = 16e9
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def analytic_flops(cfg, shape) -> float:
+    """Whole-step FLOPs (all chips)."""
+    n_active = M.count_params_analytic(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        base = 6 * n_active * tokens
+        attn = 6 * 2 * cfg.num_layers * cfg.num_heads \
+            * cfg.resolved_head_dim * tokens * (shape.seq_len / 2)
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        base = 2 * n_active * tokens
+        attn = 2 * 2 * cfg.num_layers * cfg.num_heads \
+            * cfg.resolved_head_dim * tokens * (shape.seq_len / 2)
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        base = 2 * n_active * tokens
+        ctx = min(shape.seq_len, M.kv_cache_len(cfg, shape))
+        attn = 2 * 2 * cfg.num_layers * cfg.num_heads \
+            * cfg.resolved_head_dim * tokens * ctx
+    if cfg.family == "ssm":
+        attn = 0.0
+    return float(base + attn)
+
+
+def analytic_hbm_bytes(cfg, shape) -> float:
+    """Whole-step HBM traffic (all chips), leading terms only."""
+    n_total = M.count_params_analytic(cfg)
+    n_active = M.count_params_analytic(cfg, active_only=True)
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    act = tokens * cfg.d_model * 2 * cfg.num_layers * 4  # rough activations
+    if shape.kind == "train":
+        # params bf16 r/w + grads + f32 moments r/w
+        return 2 * n_total * (2 + 2) + n_total * (4 + 4) * 2 + act * 2
+    if shape.kind == "prefill":
+        return 2 * n_total + act
+    # decode: active weights + the KV cache read every step
+    kv = (shape.global_batch * M.kv_cache_len(cfg, shape) * cfg.num_layers
+          * cfg.num_kv_heads * cfg.resolved_head_dim * 2 * 2)
+    if cfg.family == "ssm":
+        kv = 0.0
+    return 2 * n_active + kv + act
+
+
+def trip_correction(cfg, shape) -> int:
+    periods = cfg.num_layers // len(T.layer_pattern(cfg))
+    micro = 8 if shape.kind == "train" else 1
+    return periods * micro
+
+
+def analyse_one(arch: str, shape_name: str, mesh: str = "16x16") -> dict:
+    f = RESULTS / f"{arch}__{shape_name}__{mesh}.json"
+    r = json.loads(f.read_text())
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    chips = r["num_devices"]
+
+    fl = analytic_flops(cfg, shape)
+    hbm = analytic_hbm_bytes(cfg, shape)
+    trips = trip_correction(cfg, shape)
+    # per-device, already loop-attributed by the dry-run's HLO parser
+    coll = r["collective_bytes"].get("total", 0.0)
+
+    compute_t = fl / (chips * PEAK_FLOPS)
+    memory_t = hbm / (chips * HBM_BW)
+    coll_t = coll / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t,
+             "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    hlo_fl = r["flops"] * trips * chips
+    model_fl = (6 if shape.kind == "train" else 2) \
+        * M.count_params_analytic(cfg, active_only=True) \
+        * shape.global_batch * (shape.seq_len
+                                if shape.kind != "decode" else 1)
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh,
+        "compute_s": compute_t, "memory_s": memory_t,
+        "collective_s": coll_t, "dominant": dominant,
+        "model_flops": model_fl, "hlo_flops_corrected": hlo_fl,
+        "useful_ratio": model_fl / hlo_fl if hlo_fl else float("nan"),
+        "peak_gb": r["peak_bytes_per_device"] / 1e9,
+        "fits_hbm": r["peak_bytes_per_device"] <= HBM_BYTES,
+        "total_s": compute_t + memory_t + coll_t,
+        "roofline_frac": max(terms.values())
+        / max(sum(terms.values()), 1e-30),
+    }
+
+
+def full_table(mesh: str = "16x16") -> list[dict]:
+    rows = []
+    for arch in list_archs():
+        for shape in INPUT_SHAPES:
+            f = RESULTS / f"{arch}__{shape}__{mesh}.json"
+            if f.exists():
+                rows.append(analyse_one(arch, shape, mesh))
+    return rows
+
+
+def print_table(rows) -> None:
+    hdr = (f"{'arch':26s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collect':>10s} {'dominant':>10s} {'peak GB':>8s} "
+           f"{'fits':>5s} {'useful':>7s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:26s} {r['shape']:12s} "
+              f"{r['compute_s']*1e3:9.2f}m {r['memory_s']*1e3:9.2f}m "
+              f"{r['collective_s']*1e3:9.2f}m {r['dominant']:>10s} "
+              f"{r['peak_gb']:8.2f} {str(r['fits_hbm']):>5s} "
+              f"{r['useful_ratio']:7.2f}")
+
+
+def main():
+    rows = full_table()
+    print_table(rows)
+    out = pathlib.Path(__file__).parent / "results" / "roofline_16x16.json"
+    out.write_text(json.dumps(rows, indent=1))
+    print(f"\nwrote {out}")
+    # the three §Perf hillclimb picks
+    worst = max(rows, key=lambda r: r["peak_gb"])
+    collb = max(rows, key=lambda r: r["collective_s"]
+                / max(r["total_s"], 1e-30))
+    print(f"\nworst memory pressure: {worst['arch']} x {worst['shape']} "
+          f"({worst['peak_gb']:.1f} GB)")
+    print(f"most collective-bound: {collb['arch']} x {collb['shape']}")
+
+
+if __name__ == "__main__":
+    main()

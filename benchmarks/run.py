@@ -1,0 +1,76 @@
+"""Benchmark harness (deliverable d): one module per paper figure/table.
+Prints ``name,us_per_call,derived`` CSV rows for every experiment and
+finishes with the roofline table summary.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter traces (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    dur = 20.0 if args.quick else 45.0
+
+    from benchmarks import (fig6_similarity, fig8_9_layer_latency,
+                            fig10_cost, fig11_pred_accuracy,
+                            fig12_correlation, fig13_16_sensitivity,
+                            fig17_ablation, kernel_bench,
+                            table2_footprints)
+
+    suites = [
+        ("fig6", lambda: fig6_similarity.main()),
+        ("fig8_9", lambda: fig8_9_layer_latency.main(dur)),
+        ("fig10", lambda: fig10_cost.main(dur)),
+        ("fig11", lambda: fig11_pred_accuracy.main()),
+        ("fig12", lambda: fig12_correlation.main()),
+        ("fig13_16", lambda: fig13_16_sensitivity.main(
+            15.0 if args.quick else 30.0)),
+        ("fig17", lambda: fig17_ablation.main(dur)),
+        ("table2", lambda: table2_footprints.main()),
+        ("kernel", lambda: kernel_bench.main()),
+    ]
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            for row, us, derived in fn():
+                print(f"{row},{us:.3f},{derived}")
+            print(f"_meta/{name}_wall_s,{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"_meta/{name},0,FAILED")
+
+    # roofline summary (reads the dry-run artifacts)
+    try:
+        from benchmarks import roofline
+        rows = roofline.full_table()
+        if rows:
+            print()
+            roofline.print_table(rows)
+            import json
+            import pathlib
+            out = pathlib.Path(__file__).parent / "results" \
+                / "roofline_16x16.json"
+            out.write_text(json.dumps(rows, indent=1))
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+        failures += 1
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

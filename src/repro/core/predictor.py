@@ -1,0 +1,199 @@
+"""Expert Load Predictor — paper §4.1.
+
+Speculative prediction: the gate input of MoE layer `l` is fed to a
+*replica* of layer `l+d`'s gate network to estimate layer `l+d`'s expert
+load distribution `d` layers ahead. Replicated gates are fine-tuned with
+layer awareness: per-layer accuracy is profiled first, and only layers
+below the target threshold `h` are fine-tuned (early layers are the
+unstable ones — Fig. 6). Predictors share the gate's architecture and
+parameter count (Table 2: 1.9-4.2 MB total).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.training.optimizer import adamw
+
+
+# ---------------------------------------------------------------- dataset
+
+
+def collect_gate_dataset(cfg, params, token_batches, *, extra=None):
+    """Run the model over token batches collecting, per MoE layer:
+    gate inputs (tokens, D) and router logits (tokens, E).
+    Returns dict with 'inputs' (Lm, N, D) and 'logits' (Lm, N, E)."""
+    fwd = jax.jit(lambda p, b: T.forward(cfg, p, b, collect=True)[1])
+    gi, rl = [], []
+    for tokens in token_batches:
+        batch = {"tokens": tokens}
+        if extra:
+            batch.update(extra)
+        m = fwd(params, batch)
+        b, s = tokens.shape
+        gi.append(np.asarray(m["gate_input"].reshape(
+            m["gate_input"].shape[0], b * s, -1), np.float32))
+        rl.append(np.asarray(m["router_logits"].reshape(
+            m["router_logits"].shape[0], b * s, -1), np.float32))
+    return {"inputs": np.concatenate(gi, axis=1),
+            "logits": np.concatenate(rl, axis=1)}
+
+
+def split_dataset(ds, train_frac: float = 0.7, seed: int = 0):
+    """Paper §5: 7:3 train/test split."""
+    n = ds["inputs"].shape[1]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    k = int(train_frac * n)
+    tr = {k2: v[:, perm[:k]] for k2, v in ds.items()}
+    te = {k2: v[:, perm[k:]] for k2, v in ds.items()}
+    return tr, te
+
+
+# ---------------------------------------------------------------- predictor
+
+
+@dataclass
+class LoadPredictor:
+    """Per-MoE-layer gate replicas at a fixed prediction distance d.
+
+    weights: (Lm, D, E) — predictor for layer l (l >= d) is evaluated on
+    gate inputs of layer l-d. Layers l < d have no lookahead source and
+    fall back to the actual loads (equivalently d=0).
+    """
+    distance: int
+    weights: jnp.ndarray                     # (Lm, D, E)
+    finetuned_layers: list = field(default_factory=list)
+
+    @property
+    def num_layers(self) -> int:
+        return self.weights.shape[0]
+
+    @property
+    def param_bytes(self) -> int:
+        return int(np.prod(self.weights.shape)) * 4
+
+    def predict_logits(self, layer: int, hidden) -> jnp.ndarray:
+        """hidden: (N, D) gate inputs of layer `layer - d`."""
+        return hidden @ self.weights[layer]
+
+    def predict_loads(self, layer: int, hidden, top_k: int) -> np.ndarray:
+        logits = self.predict_logits(layer, hidden)
+        _, idx = jax.lax.top_k(logits, top_k)
+        e = self.weights.shape[-1]
+        return np.asarray(jnp.bincount(idx.reshape(-1), length=e))
+
+
+def from_gates(cfg, params, distance: int) -> LoadPredictor:
+    """Replicate the model's gate networks as predictors (paper §4.1)."""
+    stacked = []
+    pattern = T.layer_pattern(cfg)
+    for j, sub in enumerate(pattern):
+        if sub.ffn == "moe":
+            stacked.append(params["layers"][j]["moe"]["router"]["w_gate"])
+    # (per-period stacking) -> interleave to global MoE-layer order
+    ws = jnp.stack(stacked, axis=1)          # (P, mpp, D, E)
+    ws = ws.reshape((-1,) + ws.shape[2:])    # (Lm, D, E)
+    return LoadPredictor(distance=distance,
+                         weights=ws.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------- metrics
+
+
+def topk_overlap_accuracy(pred_logits, true_logits, top_k: int) -> float:
+    """Per-token fraction of the true top-k expert set recovered by the
+    predictor — the paper's 'expert load prediction accuracy'."""
+    _, pi = jax.lax.top_k(pred_logits, top_k)
+    _, ti = jax.lax.top_k(true_logits, top_k)
+    e = pred_logits.shape[-1]
+    po = jax.nn.one_hot(pi, e).sum(-2)
+    to = jax.nn.one_hot(ti, e).sum(-2)
+    inter = jnp.minimum(po, to).sum(-1)
+    return float(jnp.mean(inter / top_k))
+
+
+def load_correlation(pred_loads: np.ndarray, true_loads: np.ndarray) -> float:
+    """Pearson correlation of predicted vs actual load histograms (Fig 12)."""
+    p = np.asarray(pred_loads, np.float64).ravel()
+    t = np.asarray(true_loads, np.float64).ravel()
+    if p.std() == 0 or t.std() == 0:
+        return 1.0 if np.allclose(p, t) else 0.0
+    return float(np.corrcoef(p, t)[0, 1])
+
+
+def profile_accuracy(pred: LoadPredictor, ds, top_k: int) -> np.ndarray:
+    """Per-layer top-k accuracy at the predictor's distance."""
+    d = pred.distance
+    accs = np.ones(pred.num_layers)
+    for l in range(d, pred.num_layers):
+        hidden = jnp.asarray(ds["inputs"][l - d])
+        logits = pred.predict_logits(l, hidden)
+        accs[l] = topk_overlap_accuracy(logits, jnp.asarray(ds["logits"][l]),
+                                        top_k)
+    # layers < d have no lookahead source; they use same-layer gates
+    for l in range(min(d, pred.num_layers)):
+        hidden = jnp.asarray(ds["inputs"][l])
+        accs[l] = topk_overlap_accuracy(pred.predict_logits(l, hidden),
+                                        jnp.asarray(ds["logits"][l]), top_k)
+    return accs
+
+
+# ---------------------------------------------------------------- finetune
+
+
+def finetune(pred: LoadPredictor, train_ds, test_ds, top_k: int, *,
+             threshold: float = 0.8, steps: int = 200, lr: float = 3e-3,
+             batch_size: int = 1024, seed: int = 0,
+             verbose: bool = False) -> LoadPredictor:
+    """Layer-aware fine-tuning (paper §4.1): profile per-layer accuracy,
+    fine-tune only layers below `threshold` with soft-target cross-entropy
+    to the true gate distribution. Layers are trained jointly in one
+    vmapped update (the paper parallelises across layers)."""
+    d = pred.distance
+    accs = profile_accuracy(pred, test_ds, top_k)
+    needy = [l for l in range(d, pred.num_layers) if accs[l] < threshold]
+    if not needy:
+        return pred
+
+    w_sel = jnp.stack([pred.weights[l] for l in needy])   # (n, D, E)
+    x_sel = jnp.stack([jnp.asarray(train_ds["inputs"][l - d])
+                       for l in needy])                   # (n, N, D)
+    y_sel = jnp.stack([jnp.asarray(train_ds["logits"][l])
+                       for l in needy])                   # (n, N, E)
+    opt = adamw(lr, weight_decay=0.0, clip_norm=1.0)
+    state = opt.init(w_sel)
+    n_tok = x_sel.shape[1]
+    key = jax.random.PRNGKey(seed)
+
+    def loss_fn(w, x, y):
+        # soft-target CE against the true gate distribution
+        logp = jax.nn.log_softmax(jnp.einsum("lnd,lde->lne", x, w), -1)
+        tgt = jax.nn.softmax(y, -1)
+        return -jnp.mean(jnp.sum(tgt * logp, -1))
+
+    @jax.jit
+    def step(w, state, idx):
+        x = jnp.take(x_sel, idx, axis=1)
+        y = jnp.take(y_sel, idx, axis=1)
+        loss, g = jax.value_and_grad(loss_fn)(w, x, y)
+        w, state = opt.update(w, g, state)
+        return w, state, loss
+
+    bs = min(batch_size, n_tok)
+    for i in range(steps):
+        key, k = jax.random.split(key)
+        idx = jax.random.randint(k, (bs,), 0, n_tok)
+        w_sel, state, loss = step(w_sel, state, idx)
+        if verbose and i % 50 == 0:
+            print(f"  finetune step {i}: loss={float(loss):.4f}")
+
+    new_w = pred.weights
+    for i, l in enumerate(needy):
+        new_w = new_w.at[l].set(w_sel[i])
+    return LoadPredictor(distance=d, weights=new_w,
+                         finetuned_layers=list(needy))

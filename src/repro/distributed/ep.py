@@ -1,0 +1,196 @@
+"""Expert parallelism with serverless replica slots — the paper-faithful
+serving path (§2.2/§3.2): non-expert modules data/tensor-parallel, expert
+*function instances* (slots) sharded over an 'ep' mesh axis, two
+all-to-alls (scatter/gather) per MoE layer, and the MoEless replica plan
+applied as slot tables re-programmed between iterations without
+recompilation (DESIGN.md §2).
+
+Mesh ("data", "ep", "tp"): the production 16x16 model axis factorised
+into expert-parallel x tensor-parallel so architectures with E < 16
+(grok-1: 8 experts) still fill 256 chips. Activations are sharded over
+("data", "ep") and replicated over "tp" (TP semantics); expert weights
+shard their FFN width over "tp".
+
+Serverless slots: every EP rank owns `slots_per_device` weight slots —
+the TPU analogue of function instances. ``materialise_slots`` fills them
+from the expert weight bank according to the plan (the weight movement IS
+the cold start; its bytes are metered). Tokens are routed to slots
+round-robin over an expert's replicas (paper step 4), all-to-all'd to
+the slot's rank, processed by a grouped FFN in the Pallas capacity
+layout, and gathered back.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.kernels import ref as KREF
+
+
+def ep_factorisation(num_experts: int, model_degree: int) -> tuple[int, int]:
+    ep = math.gcd(num_experts, model_degree)
+    return ep, model_degree // ep
+
+
+def make_ep_mesh(num_experts: int, *, data: int = 16, model: int = 16):
+    ep, tp = ep_factorisation(num_experts, model)
+    return jax.make_mesh((data, ep, tp), ("data", "ep", "tp"))
+
+
+# ------------------------------------------------------------ slot tables
+
+
+def plan_to_tables(plan, *, ep: int, slots_per_device: int):
+    """LayerPlan -> routing tables (all shapes static).
+
+    Returns dict:
+      expert_slots (E, R_max): global slot id of each replica (-1 pad)
+      nrep         (E,)
+      slot_expert  (ep*slots_per_device,): expert id materialised in each
+                   slot (E => empty). Rank of slot s = s // slots_per_device.
+    """
+    e_count = plan.num_experts
+    r_max = int(plan.replicas.max())
+    expert_slots = -np.ones((e_count, r_max), np.int32)
+    slot_expert = np.full(ep * slots_per_device, e_count, np.int32)
+    used = np.zeros(ep, np.int32)
+    for e in range(e_count):
+        for r, g in enumerate(plan.placement[e]):
+            g = g % ep
+            assert used[g] < slots_per_device, \
+                f"rank {g} out of slots (cap {slots_per_device})"
+            s = g * slots_per_device + used[g]
+            used[g] += 1
+            expert_slots[e, r] = s
+            slot_expert[s] = e
+    return {"expert_slots": jnp.asarray(expert_slots),
+            "nrep": jnp.asarray(plan.replicas.astype(np.int32)),
+            "slot_expert": jnp.asarray(slot_expert)}
+
+
+def uniform_tables(num_experts: int, *, ep: int, slots_per_device: int):
+    """Static EP (Megatron baseline): expert e in slot 0 of rank e % ep
+    ... filling ranks round-robin."""
+    from repro.core.plan import static_plan
+    return plan_to_tables(static_plan(num_experts, ep), ep=ep,
+                          slots_per_device=slots_per_device)
+
+
+def materialise_slots(expert_weights, slot_expert, mesh):
+    """Fill the per-rank slot weight banks from the expert bank.
+    expert_weights: dict w_gate/w_up (E, D, F), w_down (E, F, D), plus a
+    zero row appended for empty slots. Returns dict of (S_total, ...)
+    arrays sharded P('ep', None, 'tp'). The gather moves exactly the
+    replica weights — the serverless cold-start traffic."""
+    def pad(w):
+        return jnp.concatenate([w, jnp.zeros_like(w[:1])], axis=0)
+
+    out = {}
+    for k, w in expert_weights.items():
+        spec = P("ep", None, "tp") if k != "w_down" else P("ep", "tp", None)
+        gathered = pad(w)[slot_expert]
+        out[k] = jax.lax.with_sharding_constraint(
+            gathered, NamedSharding(mesh, spec))
+    return out
+
+
+# ------------------------------------------------------------ the layer
+
+
+def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
+                 top_k: int, slots_per_device: int,
+                 capacity_factor: float = 2.0, act: str = "swiglu",
+                 impl: str = "ref"):
+    """x: (B, S, D) sharded P('data', 'ep', None) (replicated over 'tp').
+    slot_w: dict of slot banks from materialise_slots.
+    Returns y sharded like x, plus per-expert load metrics."""
+    ep = mesh.shape["ep"]
+    sd_ = slots_per_device
+
+    def local(x_loc, rw, wg, wu, wd, expert_slots, nrep):
+        b, s, d = x_loc.shape
+        t = b * s
+        xf = x_loc.reshape(t, d)
+        logits = xf @ rw
+        top_w, top_i = jax.lax.top_k(logits.astype(jnp.float32), top_k)
+        top_w = jax.nn.softmax(top_w, -1)
+
+        # replica choice: round robin over the expert's replicas (step 4)
+        tok = jnp.arange(t, dtype=jnp.int32)[:, None]
+        r_idx = jnp.mod(tok + jnp.arange(top_k, dtype=jnp.int32),
+                        nrep[top_i])
+        slot = expert_slots[top_i, r_idx]                    # (t, k)
+        dest = slot // sd_
+
+        # pack send buffers by destination rank
+        cap = max(1, int(capacity_factor * t * top_k / ep))
+        fdest = dest.reshape(-1)
+        forder = jnp.argsort(fdest)
+        sdst = fdest[forder]
+        starts = jnp.concatenate(
+            [jnp.zeros(1, jnp.int32),
+             jnp.cumsum(jnp.bincount(sdst, length=ep)
+                        ).astype(jnp.int32)[:-1]])
+        pos = jnp.arange(t * top_k, dtype=jnp.int32) - starts[sdst]
+        keep = pos < cap
+        ftok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)[forder]
+        fslot = slot.reshape(-1)[forder]
+        send_x = jnp.zeros((ep, cap, d), x_loc.dtype)
+        send_s = jnp.full((ep, cap), ep * sd_, jnp.int32)
+        cpos = jnp.clip(pos, 0, cap - 1)
+        send_x = send_x.at[sdst, cpos].set(
+            jnp.where(keep[:, None], xf[ftok], 0.0))
+        send_s = send_s.at[sdst, cpos].set(
+            jnp.where(keep, fslot, ep * sd_))
+
+        # scatter
+        recv_x = jax.lax.all_to_all(send_x, "ep", 0, 0)
+        recv_s = jax.lax.all_to_all(send_s, "ep", 0, 0)
+
+        # local grouped FFN over this rank's slots
+        local_slot = jnp.where(recv_s.reshape(-1) < ep * sd_,
+                               recv_s.reshape(-1) % sd_, sd_)
+        n = ep * cap
+        order = jnp.argsort(local_slot)
+        xs = recv_x.reshape(n, d)[order]
+        ls = local_slot[order]
+        gs = jnp.bincount(ls, length=sd_ + 1)[:sd_]
+        st2 = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                               jnp.cumsum(gs).astype(jnp.int32)[:-1]])
+        p2 = jnp.arange(n, dtype=jnp.int32) - st2[jnp.clip(ls, 0, sd_ - 1)]
+        valid = ls < sd_
+        buf = jnp.zeros((sd_, n, d), x_loc.dtype)
+        buf = buf.at[jnp.clip(ls, 0, sd_ - 1), jnp.clip(p2, 0, n - 1)].set(
+            jnp.where(valid[:, None], xs, 0.0))
+        out = KREF.expert_ffn_ref(buf, wg, wu, wd, gs)
+        out = jax.lax.psum(out.astype(jnp.float32), "tp")  # f sharded on tp
+        y = out[jnp.clip(ls, 0, sd_ - 1), jnp.clip(p2, 0, n - 1)]
+        y = jnp.where(valid[:, None], y, 0.0)
+        y = y[jnp.argsort(order)].reshape(ep, cap, d)
+
+        # gather
+        back = jax.lax.all_to_all(y.astype(x_loc.dtype), "ep", 0, 0)
+
+        # weighted combine at the source
+        contrib = back[sdst, cpos].astype(jnp.float32)
+        w_flat = top_w.reshape(-1)[forder]
+        contrib = contrib * jnp.where(keep, w_flat, 0.0)[:, None]
+        comb = jnp.zeros((t, d), jnp.float32).at[ftok].add(contrib)
+
+        loads = jnp.bincount(top_i.reshape(-1), length=num_experts)
+        loads = jax.lax.psum(loads, ("data", "ep"))
+        return comb.reshape(b, s, d).astype(x_loc.dtype), loads
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P("data", "ep", None), P(),
+                  P("ep", None, "tp"), P("ep", None, "tp"),
+                  P("ep", "tp", None),
+                  P(), P()),
+        out_specs=(P("data", "ep", None), P()))
+    return fn(x, router_w, slot_w["w_gate"], slot_w["w_up"],
+              slot_w["w_down"], tables["expert_slots"], tables["nrep"])

@@ -1,0 +1,215 @@
+"""Sharding-rule engine: maps every parameter / input / cache leaf to a
+PartitionSpec on the production mesh.
+
+Rules (generic, divisibility-checked so every (arch x shape x mesh)
+combination lowers):
+  * parameters: tensor-parallel 'model' on the largest divisible dim,
+    then FSDP over the data-parallel axes on the next largest divisible
+    dim (Zero-3 style). Layer-stacked leading axes (the lax.scan axis)
+    are never sharded.
+  * batch inputs: DP axes on the batch dim when divisible, else the
+    largest divisible dim takes 'model' (e.g. long_500k's batch=1 shards
+    its KV-cache sequence/head dims instead).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+
+def _axis_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _best_dim(shape, divisor: int, taken: set, *, skip: set = frozenset()):
+    """Largest dim divisible by divisor, not already taken; ties -> later
+    dim (matmul-minor dims lay out better on TPU)."""
+    best, best_size = None, 0
+    for i, s in enumerate(shape):
+        if i in taken or i in skip:
+            continue
+        if s % divisor == 0 and s >= divisor and s >= best_size:
+            best, best_size = i, s
+    return best
+
+
+def spec_for_param(shape, mesh, *, skip_axis0: bool = False) -> P:
+    skip = {0} if skip_axis0 else set()
+    entries = [None] * len(shape)
+    taken = set()
+    mp = mesh.shape.get("model", 1)
+    i = _best_dim(shape, mp, taken, skip=skip)
+    if i is not None and mp > 1:
+        entries[i] = "model"
+        taken.add(i)
+    dps = dp_axes(mesh)
+    dp = _axis_size(mesh, dps)
+    j = _best_dim(shape, dp, taken, skip=skip)
+    if j is not None and dp > 1:
+        entries[j] = dps if len(dps) > 1 else dps[0]
+        taken.add(j)
+    return P(*entries)
+
+
+def spec_for_input(shape, mesh) -> P:
+    """Batch-first rule: DP on dim 0 if divisible; 'model' on the largest
+    remaining divisible dim (so e.g. a (B, S, KV, hd) cache shards)."""
+    entries = [None] * len(shape)
+    taken = set()
+    dps = dp_axes(mesh)
+    dp = _axis_size(mesh, dps)
+    if len(shape) >= 1 and dp > 1 and shape[0] % dp == 0 and shape[0] >= dp:
+        entries[0] = dps if len(dps) > 1 else dps[0]
+        taken.add(0)
+    mp = mesh.shape.get("model", 1)
+    if mp > 1:
+        i = _best_dim(shape, mp, taken | {0} if 0 not in taken else taken)
+        if i is not None and i != 0:
+            entries[i] = "model"
+    return P(*entries)
+
+
+def _is_stacked(path) -> bool:
+    # leaves under params['layers'][j] / params['encoder']['layers'][j]
+    # carry a leading lax.scan axis
+    keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    return "layers" in keys
+
+
+def params_shardings(params_shapes, mesh, *, fsdp: bool = True,
+                     ep_experts: bool = False):
+    """NamedSharding pytree for a params (or optimizer-state) tree.
+
+    fsdp=False (ZeRO-2 / inference layout): parameters are tensor-parallel
+    over 'model' only and replicated over the DP axes — no per-use weight
+    all-gather; keep fsdp=True for optimizer state, which is touched once
+    per step.
+
+    ep_experts=True (§Perf — the paper's expert parallelism expressed in
+    GSPMD): expert weight banks (stacked (layers, E, d, f)) put 'model' on
+    the EXPERT dim when divisible, so each model rank owns E/mp whole
+    experts and the dispatch einsum lowers to all-to-all instead of
+    f-dim weight all-gathers."""
+    mp = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        shape = leaf.shape
+        stacked = _is_stacked(path)
+        is_expert = any(getattr(k, "key", None) == "experts"
+                        for k in path)
+        if ep_experts and is_expert and len(shape) >= 3:
+            e_axis = 1 if stacked else 0
+            if mp > 1 and shape[e_axis] % mp == 0:
+                entries = [None] * len(shape)
+                entries[e_axis] = "model"
+                if fsdp:
+                    dps = dp_axes(mesh)
+                    dp = _axis_size(mesh, dps)
+                    j = _best_dim(shape, dp,
+                                  {e_axis} | ({0} if stacked else set()))
+                    if j is not None and dp > 1:
+                        entries[j] = dps if len(dps) > 1 else dps[0]
+                return NamedSharding(mesh, P(*entries))
+        spec = spec_for_param(shape, mesh, skip_axis0=stacked)
+        if not fsdp:
+            dps = set(dp_axes(mesh))
+            spec = P(*[None if (e in dps or (isinstance(e, tuple)
+                                             and set(e) & dps)) else e
+                       for e in spec])
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def batch_shardings(batch_shapes, mesh, *, replicate: bool = False):
+    def one(leaf):
+        if replicate or not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, spec_for_input(leaf.shape, mesh))
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_shardings(cache_shapes, mesh, *, seq_over_dp: bool = False,
+                    heads_model: bool = False):
+    """Decode caches: leading scan axis skipped, batch dim next.
+
+    seq_over_dp (inference-optimal layout, §Perf H3): the cache SEQUENCE
+    dim takes the DP axes and the batch dim is left replicated — decode
+    activations are tiny, so replicating them removes the per-layer
+    weight all-gather while the big KV cache still shards."""
+    def one(leaf):
+        shape = leaf.shape
+        if len(shape) <= 1:
+            return NamedSharding(mesh, P())
+        if heads_model and len(shape) >= 3:
+            # (layers, B, S, KV, hd): batch->DP, LAST dim->model. The
+            # sharded-sequence layout makes every ring-slot write a
+            # cross-shard reshard (P2-iter1, refuted); sharding hd keeps
+            # cache updates local and attention reduces partial scores.
+            dps = dp_axes(mesh)
+            dp = _axis_size(mesh, dps)
+            mp = mesh.shape.get("model", 1)
+            entries = [None] * (len(shape) - 1)
+            if dp > 1 and shape[1] % dp == 0 and shape[1] >= dp:
+                entries[0] = dps if len(dps) > 1 else dps[0]
+            if mp > 1 and shape[-1] % mp == 0 and shape[-1] >= mp:
+                entries[-1] = "model"
+            return NamedSharding(mesh, P(None, *entries))
+        if seq_over_dp and len(shape) >= 3:
+            dps = dp_axes(mesh)
+            dp = _axis_size(mesh, dps)
+            entries = [None] * (len(shape) - 1)
+            taken = set()
+            if shape[2] % dp == 0 and shape[2] >= dp and dp > 1:
+                entries[1] = dps if len(dps) > 1 else dps[0]
+                taken.add(1)
+            mp = mesh.shape.get("model", 1)
+            i = _best_dim(shape[1:], mp, taken | {0})
+            if i is not None and mp > 1:
+                entries[i] = "model"
+            return NamedSharding(mesh, P(None, *entries))
+        inner = spec_for_input(shape[1:], mesh)
+        return NamedSharding(mesh, P(None, *inner))
+    return jax.tree.map(one, cache_shapes)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ------------------------------------------------------------ activations
+
+_ACT_MESH = {"mesh": None}
+
+
+def set_activation_mesh(mesh) -> None:
+    """Enable sequence-parallel activation constraints inside the model
+    forward (batch over DP axes, sequence over the model axis). Called by
+    launchers/dry-run; None disables (single-device tests)."""
+    _ACT_MESH["mesh"] = mesh
+
+
+def constrain_activations(h):
+    """h: (B, S, D) residual-stream tensor. Shards B over DP and S over
+    'model' when divisible — caps the per-device activation checkpoint
+    footprint at tokens/(dp*mp) per layer (sequence parallelism)."""
+    mesh = _ACT_MESH["mesh"]
+    if mesh is None or h.ndim != 3:
+        return h
+    b, s, _ = h.shape
+    dps = dp_axes(mesh)
+    dp = _axis_size(mesh, dps)
+    mp = mesh.shape.get("model", 1)
+    entries = [None, None, None]
+    if dp > 1 and b % dp == 0:
+        entries[0] = dps if len(dps) > 1 else dps[0]
+    if mp > 1 and s % mp == 0:
+        entries[1] = "model"
+    return jax.lax.with_sharding_constraint(
+        h, NamedSharding(mesh, P(*entries)))

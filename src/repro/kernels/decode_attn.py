@@ -1,0 +1,134 @@
+"""Pallas TPU decode-attention kernel: one new query per sequence against
+a (possibly ring-buffered) KV cache — the serving hot spot of every
+decode_32k / long_500k shape.
+
+Grid (B, H, S//bs) with the cache-sequence axis innermost ("arbitrary"):
+each step streams one (bs, hd) K/V tile HBM->VMEM and maintains the
+online-softmax running (m, l, acc) in SMEM/VMEM scratch, exactly the
+flash-decoding recurrence. GQA is handled by indexing the KV head as
+h // (H // KV) in the BlockSpec index maps — no repeated-KV
+materialisation (the jnp path broadcasts; the kernel reads each KV tile
+once per query-head group).
+
+Masking: slots >= kv_len are invalid (unwritten cache), and with
+window > 0 positions <= q_pos - window are masked (sliding window).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(scalar_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, ns: int, window: int):
+    si = pl.program_id(2)
+    b = pl.program_id(0)
+    bs = k_ref.shape[0]
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = scalar_ref[b, 0]
+    q_pos = scalar_ref[b, 1]
+    q = q_ref[...].astype(jnp.float32).reshape(1, -1)   # (1, hd)
+    k = k_ref[...].astype(jnp.float32)          # (bs, hd)
+    v = v_ref[...].astype(jnp.float32)
+
+    s = (q @ k.T)                               # (1, bs)
+    slot = si * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    kpos = pos_ref[...].reshape(1, bs)
+    mask = (slot < kv_len) & (kpos <= q_pos)
+    if window:
+        mask = mask & (kpos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _out():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)) \
+            .astype(o_ref.dtype).reshape(o_ref.shape)
+
+
+def decode_attention(q, k, v, kv_pos, kv_len, q_pos, *, window: int = 0,
+                     bs: int = 512, interpret: bool = False):
+    """q: (B, H, hd); k/v: (B, S, KV, hd); kv_pos: (B, S) absolute
+    positions of cache slots; kv_len/q_pos: (B,). Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    groups = h // kv
+    bs = min(bs, s)
+    ns = pl.cdiv(s, bs)
+    scale = 1.0 / math.sqrt(hd)
+    q = (q * scale).astype(q.dtype)
+    scalars = jnp.stack([jnp.broadcast_to(kv_len, (b,)).astype(jnp.int32),
+                         jnp.broadcast_to(q_pos, (b,)).astype(jnp.int32)],
+                        axis=1)
+    kernel = functools.partial(_kernel, ns=ns, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, h, ns),
+            in_specs=[
+                pl.BlockSpec((None, None, hd),
+                             lambda b, hh, si, sc: (b, hh, 0)),
+                pl.BlockSpec((None, bs, None, hd),
+                             lambda b, hh, si, sc:
+                             (b, si, hh // (h // kv), 0)),
+                pl.BlockSpec((None, bs, None, hd),
+                             lambda b, hh, si, sc:
+                             (b, si, hh // (h // kv), 0)),
+                pl.BlockSpec((None, bs),
+                             lambda b, hh, si, sc: (b, si)),
+            ],
+            out_specs=pl.BlockSpec((None, None, hd),
+                                   lambda b, hh, si, sc: (b, hh, 0)),
+            scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32),
+                            pltpu.VMEM((1, 1), jnp.float32),
+                            pltpu.VMEM((1, hd), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(scalars, q, k, v, kv_pos)
+
+
+def decode_attention_ref(q, k, v, kv_pos, kv_len, q_pos, *,
+                         window: int = 0):
+    """Pure-jnp oracle (mirrors models.layers.attention semantics)."""
+    b, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    groups = h // kv
+    kk = jnp.broadcast_to(k[:, :, :, None, :],
+                          (b, s, kv, groups, hd)).reshape(b, s, h, hd)
+    vv = jnp.broadcast_to(v[:, :, :, None, :],
+                          (b, s, kv, groups, hd)).reshape(b, s, h, hd)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / math.sqrt(hd)
+    slot = jnp.arange(s)[None, None, :]
+    mask = (slot < kv_len[:, None, None]) \
+        & (kv_pos[:, None, :] <= q_pos[:, None, None])
+    if window:
+        mask = mask & (kv_pos[:, None, :] > q_pos[:, None, None] - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Jit'd public wrappers around the Pallas kernels with automatic backend
+selection: real TPU lowering on TPU, interpret-mode on CPU when
+explicitly requested, pure-jnp reference otherwise (fast CPU tests)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import moe_gmm, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def expert_ffn(x, w_gate, w_up, w_down, group_sizes, *, impl: str = "auto"):
+    """Capacity-layout SwiGLU expert FFN: (E, C, D) -> (E, C, D).
+
+    impl: 'auto' (pallas on TPU else ref) | 'pallas' | 'pallas_interpret'
+          | 'ref'
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.expert_ffn_ref(x, w_gate, w_up, w_down, group_sizes)
+    interp = impl == "pallas_interpret"
+    h = moe_gmm.fused_gate_up(x, w_gate, w_up, group_sizes,
+                              interpret=interp)
+    return moe_gmm.gmm(h, w_down, group_sizes, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def gmm(x, w, group_sizes, *, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.gmm_ref(x, w, group_sizes)
+    return moe_gmm.gmm(x, w, group_sizes,
+                       interpret=(impl == "pallas_interpret"))

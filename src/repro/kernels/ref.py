@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (used by pytest allclose
+sweeps and as the CPU fallback path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(x, w_gate, w_up, w_down, group_sizes=None):
+    """Capacity-layout expert FFN (the MoE hot spot).
+
+    x: (E, C, D); w_gate/w_up: (E, D, F); w_down: (E, F, D).
+    group_sizes: (E,) — rows >= group_sizes[e] are padding and must not
+    contribute (outputs zeroed there). Returns (E, C, D).
+    """
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, w_gate)) \
+        * jnp.einsum("ecd,edf->ecf", x, w_up)
+    y = jnp.einsum("ecf,efd->ecd", h, w_down)
+    if group_sizes is not None:
+        c = x.shape[1]
+        mask = jnp.arange(c)[None, :] < group_sizes[:, None]
+        y = jnp.where(mask[..., None], y, 0.0)
+    return y
+
+
+def gmm_ref(x, w, group_sizes=None):
+    """Batched per-expert matmul: (E, C, D) @ (E, D, F) -> (E, C, F),
+    rows beyond group_sizes[e] zeroed."""
+    y = jnp.einsum("ecd,edf->ecf", x, w)
+    if group_sizes is not None:
+        c = x.shape[1]
+        mask = jnp.arange(c)[None, :] < group_sizes[:, None]
+        y = jnp.where(mask[..., None], y, 0.0)
+    return y
+
+
+def topk_gating_ref(logits, top_k: int):
+    """Router: softmax-over-topk weights + indices."""
+    w, i = jax.lax.top_k(logits, top_k)
+    return jax.nn.softmax(w, axis=-1), i

@@ -1,0 +1,373 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers and compiles on the production mesh, and extract the
+roofline terms from the compiled artifact (no device allocation — all
+inputs are ShapeDtypeStructs).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+Results accumulate in benchmarks/results/dryrun/*.json.
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        params_shardings, replicated)
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.training.optimizer import adamw
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] \
+    / "benchmarks" / "results" / "dryrun"
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
+                "s16": 2, "u16": 2, "c64": 8, "f8e4m3fn": 1, "f8e5m2": 1}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_CALLEE_RE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_CALLS_SET_RE = re.compile(r"calls=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def hlo_collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective bytes with EXACT loop attribution: bytes of a
+    collective inside a while body are multiplied by the loop's
+    known_trip_count (XLA annotates it), propagated through nested loops
+    via the computation call graph."""
+    comps: dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    # per-computation collective bytes + call edges
+    bytes_by_comp: dict[str, dict] = {}
+    edges: dict[str, list] = {}
+    for name, lines in comps.items():
+        per_op: dict[str, float] = {}
+        edge = []
+        for line in lines:
+            lhs_rhs = line.split(" = ", 1)
+            body = lhs_rhs[1] if len(lhs_rhs) == 2 else line
+            opname = None
+            for c in _COLLECTIVES:
+                if re.search(rf"\s{c}(?:-start|-done)?\(", " " + body) \
+                        or body.startswith(c):
+                    opname = c
+                    break
+            if opname and "-done(" not in body:
+                # communicated volume ~ output shape(s), which precede the
+                # op name (handles tuple outputs of sync/async forms)
+                idx = body.find(opname)
+                per_op[opname] = per_op.get(opname, 0) \
+                    + _shape_bytes(body[:idx])
+            trips = 1
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trips = int(tm.group(1))
+            for cs in _CALLS_SET_RE.findall(line):
+                for callee in re.findall(r"%?([\w.\-]+)", cs):
+                    edge.append((callee, 1))
+            for callee in _CALLEE_RE.findall(line):
+                edge.append((callee, trips if "body=" in line else
+                             (trips if "condition=" in line else 1)))
+        bytes_by_comp[name] = per_op
+        edges[name] = edge
+
+    # propagate multipliers from the entry computation (fixpoint over the
+    # DAG; HLO has no recursion so this converges in <= depth passes)
+    if entry is None:
+        entry = max(comps, key=lambda n: len(comps[n])) if comps else None
+    mult = {name: 0.0 for name in comps}
+    if entry is not None:
+        mult[entry] = 1.0
+        for _ in range(40):
+            new = {name: 0.0 for name in comps}
+            new[entry] = 1.0
+            for name, es in edges.items():
+                for callee, k in es:
+                    if callee in new:
+                        new[callee] += mult[name] * k
+            if new == mult:
+                break
+            mult = new
+
+    totals: dict[str, float] = {}
+    for name, per_op in bytes_by_comp.items():
+        m = mult.get(name, 1.0) or 1.0 if per_op else 0.0
+        for op, b in per_op.items():
+            totals[op] = totals.get(op, 0) + b * m
+            totals["total"] = totals.get("total", 0) + b * m
+    return totals
+
+
+def build_step(cfg, shape, variant=None):
+    """Returns (step_fn, abstract_args, in_shardings_builder).
+
+    `variant` (dict) selects §Perf hillclimb configurations:
+      microbatches: int (train, default 8)
+      remat: 'full' | 'dots' | 'none'
+      fsdp_params: bool (False => ZeRO-2: TP-only bf16 params)
+      seq_over_dp: bool (decode: replicate batch, shard cache seq over DP)
+      mamba: dict for repro.models.ssm.set_mamba_opts
+    """
+    v = dict(variant or {})
+    from repro.models.ssm import set_mamba_opts
+    mamba_opts = {"fused_y": False, "chunk_remat": False,
+                  **v.get("mamba", {})}
+    set_mamba_opts(**mamba_opts)
+    fsdp = v.get("fsdp_params", True)
+    epx = v.get("ep_experts", False)
+    window = M.effective_window(cfg, shape)
+    batch = M.input_specs(cfg, shape, abstract=True)
+
+    if shape.kind == "train":
+        opt = adamw(1e-4)
+        aparams = M.abstract_params(cfg)
+        aopt = jax.eval_shape(opt.init, aparams)
+
+        def make(mesh=None):
+            gs = None
+            if not fsdp and mesh is not None:
+                # ZeRO-2: grads reduce-scatter into a fully-sharded f32
+                # accumulator even though bf16 params are TP-only
+                gs = params_shardings(aparams, mesh, fsdp=True)
+            return M.make_train_step(
+                cfg, opt, window=window,
+                microbatches=v.get("microbatches", 8),
+                remat=v.get("remat", "full"), grad_shardings=gs)
+
+        step = make(getattr(build_step, "_mesh", None))
+        args = (aparams, aopt, batch)
+
+        def shardings(mesh):
+            return (params_shardings(aparams, mesh, fsdp=fsdp,
+                                     ep_experts=epx),
+                    _opt_shardings(aopt, mesh),
+                    batch_shardings(batch, mesh))
+        return step, args, shardings
+
+    if shape.kind == "prefill":
+        step = M.make_prefill_step(cfg, window=window)
+        aparams = M.abstract_params(cfg)
+        args = (aparams, batch)
+
+        def shardings(mesh):
+            return (params_shardings(aparams, mesh, fsdp=fsdp,
+                                     ep_experts=epx),
+                    batch_shardings(batch, mesh))
+        return step, args, shardings
+
+    # decode
+    step = M.make_serve_step(cfg, window=window)
+    aparams = M.abstract_params(cfg)
+    acache = M.abstract_cache(cfg, shape)
+    args = (aparams, batch, acache,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    seq_dp = v.get("seq_over_dp", False)
+    heads_model = v.get("cache_heads_model", False)
+
+    def shardings(mesh):
+        return (params_shardings(aparams, mesh, fsdp=fsdp,
+                                 ep_experts=epx),
+                batch_shardings(batch, mesh, replicate=seq_dp),
+                cache_shardings(acache, mesh, seq_over_dp=seq_dp,
+                                heads_model=heads_model),
+                replicated(mesh))
+    return step, args, shardings
+
+
+def _opt_shardings(aopt, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ps = params_shardings(aopt["mu"], mesh)
+    return {"mu": ps, "nu": params_shardings(aopt["nu"], mesh),
+            "step": NamedSharding(mesh, P())}
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            save: bool = True, verbose: bool = True,
+            variant=None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod,
+                                shape=(variant or {}).get("mesh_shape"))
+    ndev = mesh.size
+    T.set_moe_dispatch_groups(
+        int(jnp.prod(jnp.array([mesh.shape[a] for a in dp_axes(mesh)]))))
+
+    from repro.distributed.sharding import set_activation_mesh
+    set_activation_mesh(mesh)
+    build_step._mesh = mesh          # ZeRO-2 grad shardings need the mesh
+    step, args, shardings_builder = build_step(cfg, shape, variant)
+    # donate mutated state: params+opt for train, the KV cache for decode
+    donate = (0, 1) if shape.kind == "train" else \
+        ((2,) if shape.kind == "decode" else ())
+    t0 = time.time()
+    with mesh:
+        in_sh = shardings_builder(mesh)
+        lowered = jax.jit(step, in_shardings=in_sh,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = hlo_collective_bytes(hlo)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "num_devices": ndev,
+        "kind": shape.kind,
+        "window": M.effective_window(cfg, shape),
+        "flops": cost.get("flops", 0.0) if cost else 0.0,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else 0.0,
+        "collective_bytes": coll,
+        "argument_bytes_per_device": getattr(
+            mem, "argument_size_in_bytes", 0),
+        "output_bytes_per_device": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", 0),
+        "alias_bytes_per_device": getattr(mem, "alias_size_in_bytes", 0),
+        "peak_bytes_per_device": getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0)
+        - getattr(mem, "alias_size_in_bytes", 0),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "params": M.count_params_analytic(cfg),
+        "active_params": M.count_params_analytic(cfg, active_only=True),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} on {result['mesh']}: "
+              f"flops={result['flops']:.3e} "
+              f"coll={coll.get('total', 0):.3e}B "
+              f"peak/dev={result['peak_bytes_per_device']/1e9:.2f}GB "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+        print("  memory_analysis:", mem)
+    if save:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        out = RESULTS_DIR / \
+            f"{arch}__{shape_name}__{result['mesh']}{suffix}.json"
+        out.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    # §Perf hillclimb variant flags
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default=None,
+                    choices=["full", "dots", "none"])
+    ap.add_argument("--no-fsdp-params", action="store_true")
+    ap.add_argument("--seq-over-dp", action="store_true")
+    ap.add_argument("--cache-heads-model", action="store_true")
+    ap.add_argument("--ep-experts", action="store_true")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="per-pod data x model, e.g. 32x8")
+    ap.add_argument("--mamba-fused", action="store_true")
+    ap.add_argument("--mamba-remat", action="store_true")
+    ap.add_argument("--mamba-inline", action="store_true")
+    args = ap.parse_args(argv)
+
+    variant = {}
+    if args.microbatches is not None:
+        variant["microbatches"] = args.microbatches
+    if args.remat is not None:
+        variant["remat"] = args.remat
+    if args.no_fsdp_params:
+        variant["fsdp_params"] = False
+    if args.seq_over_dp:
+        variant["seq_over_dp"] = True
+    if args.cache_heads_model:
+        variant["cache_heads_model"] = True
+    if args.ep_experts:
+        variant["ep_experts"] = True
+    if args.mesh_shape:
+        variant["mesh_shape"] = tuple(
+            int(x) for x in args.mesh_shape.split("x"))
+    mam = {}
+    if args.mamba_fused:
+        mam["fused_y"] = True
+    if args.mamba_remat:
+        mam["chunk_remat"] = True
+    if args.mamba_inline:
+        mam["inline_ab"] = True
+    if mam:
+        variant["mamba"] = mam
+
+    combos = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    for a in archs:
+        for s in shapes:
+            combos.append((a, s))
+    failures = []
+    for a, s in combos:
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        f = RESULTS_DIR / f"{a}__{s}__{mesh_tag}.json"
+        if args.skip_existing and f.exists():
+            print(f"[dryrun] skip existing {a} x {s} ({mesh_tag})")
+            continue
+        try:
+            run_one(a, s, multi_pod=args.multi_pod,
+                    variant=variant or None, tag=args.tag)
+        except Exception as e:  # noqa: BLE001 — report, keep sweeping
+            failures.append((a, s, repr(e)[:200]))
+            print(f"[dryrun] FAIL {a} x {s}: {e!r}"[:500])
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for a, s, e in failures:
+            print(f"  {a} x {s}: {e}")
+        sys.exit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

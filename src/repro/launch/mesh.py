@@ -1,0 +1,37 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS (not module-level constants) so importing this
+module never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax
+init, and nothing here may run earlier.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, shape=None):
+    """v5e pod mesh: 16x16 = 256 chips per pod; 2 pods = 512 chips with a
+    leading 'pod' axis (DCN-connected). `shape` overrides the per-pod
+    (data, model) factorisation for §Perf mesh-reshape experiments —
+    always 256 chips/pod."""
+    per_pod = tuple(shape) if shape else (16, 16)
+    assert per_pod[0] * per_pod[1] == 256, "a v5e pod is 256 chips"
+    mesh_shape = ((2,) + per_pod) if multi_pod else per_pod
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(mesh_shape, axes)
+
+
+def make_host_mesh():
+    """Single-process mesh over whatever devices exist (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """Logical data-parallel axes (pod is folded into DP)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def mp_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,45 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b --smoke \
+      --steps 100 --seq-len 128 --batch 8
+
+Full (non-smoke) configs are for pod hardware; on this CPU container use
+--smoke. The step function is the same one the dry-run lowers for the
+production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.training.train_loop import train
+    cfg = get_config(args.arch, smoke=args.smoke)
+    print(f"training {cfg.name} (smoke={args.smoke}) for {args.steps} steps")
+    res, _params = train(
+        cfg, steps=args.steps, seq_len=args.seq_len,
+        global_batch=args.batch, lr=args.lr,
+        microbatches=args.microbatches,
+        checkpoint_path=args.checkpoint,
+        checkpoint_every=args.checkpoint_every)
+    print(f"done: loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+          f"({res.steps_per_s:.2f} steps/s)")
+
+
+if __name__ == "__main__":
+    main()

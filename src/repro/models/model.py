@@ -1,0 +1,212 @@
+"""Public model API: build step functions per (config × input-shape kind),
+abstract input specs for the dry-run, and parameter accounting.
+
+Step functions (all pure, jit-able, shard-able):
+  train_step(params, opt_state, batch)        -> (params, opt_state, metrics)
+  prefill_step(params, batch)                 -> (logits, cache, metrics)
+  serve_step(params, batch, cache, cache_len) -> (token_logits, new_cache)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as T
+
+# window used for the sliding-window variant that makes long_500k runnable
+# on quadratic-attention architectures (DESIGN.md §4)
+LONG_CONTEXT_WINDOW = 8192
+
+
+def needs_window(cfg: ModelConfig, shape: InputShape) -> bool:
+    """Quadratic-attention archs use the sliding-window variant at 500k."""
+    has_full_attn = cfg.family not in ("ssm",)
+    return (has_full_attn and shape.seq_len > 65536
+            and cfg.sliding_window == 0)
+
+
+def effective_window(cfg: ModelConfig, shape: InputShape) -> int:
+    if cfg.sliding_window:
+        return cfg.sliding_window
+    return LONG_CONTEXT_WINDOW if needs_window(cfg, shape) else 0
+
+
+def kv_cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    w = effective_window(cfg, shape)
+    return min(shape.seq_len, w) if w else shape.seq_len
+
+
+# ---------------------------------------------------------------- inputs
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                *, abstract: bool = True, key=None):
+    """Model inputs for one step. With abstract=True returns
+    ShapeDtypeStructs (dry-run: no allocation); else concrete arrays.
+
+    train:   {tokens (B,S), labels (B,S), ...}
+    prefill: {tokens (B,S), ...}
+    decode:  {tokens (B,1), ...}  (+ cache built separately)
+    """
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+
+    def mk(shp, dtype=jnp.int32, maxval=None):
+        if abstract:
+            return jax.ShapeDtypeStruct(shp, dtype)
+        if dtype == jnp.int32:
+            return jax.random.randint(key, shp, 0, maxval or cfg.vocab_size,
+                                      dtype)
+        return jax.random.normal(key, shp, dtype) * 0.02
+
+    batch = {"tokens": mk((b, s))}
+    if shape.kind == "train":
+        batch["labels"] = mk((b, s))
+    if cfg.family == "vlm":
+        # patch embeddings (stub vision frontend) occupy a prefix of the seq
+        batch["vis_embeds"] = mk((b, s, cfg.d_model), jnp.bfloat16)
+        if abstract:
+            batch["vis_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+        else:
+            batch["vis_mask"] = jnp.broadcast_to(
+                jnp.arange(s)[None] < min(64, max(1, s // 2)), (b, s))
+        if cfg.rope == "mrope":
+            batch["positions"] = mk((b, s, 3), jnp.int32, maxval=shape.seq_len)
+    if cfg.family == "audio":
+        enc_t = cfg.encdec.encoder_seq_len
+        if shape.kind == "decode":
+            # decode consumes the frozen encoder output
+            batch["enc_out"] = mk((b, enc_t, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["enc_embeds"] = mk((b, enc_t, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape):
+    """ShapeDtypeStruct pytree of the decode cache."""
+    max_len = kv_cache_len(cfg, shape)
+    concrete = jax.eval_shape(
+        lambda: T.init_cache(cfg, None, shape.global_batch, max_len))
+    return concrete
+
+
+# ---------------------------------------------------------------- steps
+
+
+def loss_fn(cfg, params, batch, *, window=0, aux_weight: float = 0.01,
+            remat: str = "full"):
+    logits, metrics = T.forward(cfg, params, batch, window=window,
+                                remat=remat)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    # logsumexp form: never materialises a full log-softmax tensor
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = (lse - picked).mean()
+    total = loss + aux_weight * metrics.get("aux_loss", 0.0)
+    metrics = dict(metrics, loss=loss)
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *, window: int = 0,
+                    remat: str = "full", microbatches: int = 1,
+                    grad_shardings=None):
+    """optimizer: repro.training.optimizer.Optimizer.
+
+    microbatches > 1 enables gradient accumulation: the global batch is
+    split along dim 0 and scanned, bounding activation memory at
+    B/microbatches per pass (one optimizer update per call either way).
+
+    grad_shardings: optional NamedSharding pytree pinned onto the f32
+    gradient accumulator — ZeRO-2: params stay TP-replicated over DP while
+    per-microbatch grads reduce-scatter into a DP-sharded accumulator.
+    """
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(cfg, p, b, window=window, remat=remat),
+        has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def _pin(g):
+                if grad_shardings is None:
+                    return g
+                return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                                    grad_shardings)
+
+            def acc(carry, b):
+                g_acc, m_acc = carry
+                (_, m), g = grad_fn(params, b)
+                g_acc = _pin(jax.tree.map(jnp.add, g_acc, g))
+                m_acc = jax.tree.map(jnp.add, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = _pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (_, m0), _ = jax.eval_shape(grad_fn, params,
+                                        jax.tree.map(lambda x: x[0], mb))
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+            (grads, metrics), _ = jax.lax.scan(acc, (g0, m0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, metrics)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, window: int = 0):
+    def prefill_step(params, batch):
+        logits, metrics = T.forward(cfg, params, batch, window=window,
+                                    last_only=True)
+        return logits, metrics
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, window: int = 0):
+    def serve_step(params, batch, cache, cache_len):
+        logits, new_cache, _ = T.decode_step(cfg, params, batch, cache,
+                                             cache_len, window=window)
+        return logits, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------- params
+
+
+def init_params(cfg: ModelConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return T.init_params(cfg, key)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(partial(T.init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = abstract_params(cfg)
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+        n = math.prod(leaf.shape)
+        total += n
+        if any(getattr(k, "key", None) == "experts" for k in path):
+            expert += n
+    if active_only and cfg.is_moe:
+        total -= expert
+        total += expert * cfg.moe.top_k // cfg.moe.num_experts
+    return total

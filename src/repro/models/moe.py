@@ -1,0 +1,132 @@
+"""Mixture-of-Experts layer.
+
+Two execution paths:
+  * ``dispatch_moe`` — GShard-style grouped capacity dispatch expressed as
+    einsums (differentiable, GSPMD-shardable: the dispatch contraction
+    lowers to all-to-all when tokens are sharded over `data` and experts
+    over `model`). Used by train/prefill/decode steps under pjit.
+  * the explicit EP path with replica slots lives in
+    ``repro.distributed.ep`` (shard_map + lax.all_to_all) — that one is
+    the paper-faithful serving path with MoEless serverless replica slots.
+
+The router also emits the per-expert token-load histogram that feeds the
+MoEless Expert Load Predictor / Scaler (paper §4).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def init_router(key, d: int, num_experts: int, dtype):
+    return {"w_gate": jax.random.normal(key, (d, num_experts), dtype)
+            / math.sqrt(d)}
+
+
+def init_experts(key, d: int, f: int, num_experts: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    sd, sf = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {"w_up": jax.random.normal(ks[1], (num_experts, d, f), dtype) * sd,
+         "w_down": jax.random.normal(ks[2], (num_experts, f, d), dtype) * sf}
+    if act == "swiglu":
+        p["w_gate"] = jax.random.normal(ks[0], (num_experts, d, f), dtype) * sd
+    return p
+
+
+def router_topk(logits, top_k: int):
+    """Returns (weights (T,k) softmax-normalised over the selected experts,
+    indices (T,k), full softmax probs (T,E))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_i = jax.lax.top_k(logits.astype(jnp.float32), top_k)
+    top_w = jax.nn.softmax(top_w, axis=-1)
+    return top_w, top_i, probs
+
+
+def expert_loads(top_i, num_experts: int):
+    """Token count per expert — the paper's W_{l,e} (§3.3)."""
+    oh = jax.nn.one_hot(top_i, num_experts, dtype=jnp.int32)  # (T,k,E)
+    return oh.sum(axis=(0, 1))
+
+
+def load_balance_loss(probs, top_i, num_experts: int):
+    """Switch-Transformer auxiliary loss: E * sum_e f_e * p_e."""
+    sel = jax.nn.one_hot(top_i[..., 0], num_experts, dtype=jnp.float32)
+    f = sel.mean(axis=0)
+    p = probs.mean(axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def experts_ffn(p, x, act: str):
+    """x: (E, N, D) -> (E, N, D), vmapped per-expert FFN."""
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("end,edf->enf", x, p["w_gate"])) \
+            * jnp.einsum("end,edf->enf", x, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("end,edf->enf", x, p["w_up"]))
+    return jnp.einsum("enf,efd->end", h, p["w_down"])
+
+
+def dispatch_moe(p, x, *, top_k: int, num_experts: int,
+                 capacity_factor: float = 1.25, act: str = "swiglu",
+                 groups: int = 1):
+    """Grouped capacity dispatch (GShard).
+
+    x: (B, S, D). Tokens are flattened and split into `groups` dispatch
+    groups (set groups = number of data shards so each group's dispatch
+    tensor stays local); capacity C = ceil(cf * k * Tg / E) per group.
+    Returns (y, metrics) where metrics carries the expert-load histogram
+    and aux loss.
+    """
+    b, s, d = x.shape
+    t = b * s
+    groups = max(1, min(groups, t))
+    while t % groups:
+        groups -= 1
+    tg = t // groups
+    cap = max(1, math.ceil(capacity_factor * top_k * tg / num_experts))
+    xg = x.reshape(groups, tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"]["w_gate"])
+    top_w, top_i, probs = router_topk(
+        logits.reshape(t, num_experts), top_k)
+    top_w = top_w.reshape(groups, tg, top_k)
+    top_i = top_i.reshape(groups, tg, top_k)
+
+    # position-in-expert with priority to lower k-slots (GShard order)
+    sel = jax.nn.one_hot(top_i, num_experts, dtype=jnp.float32)  # (g,t,k,e)
+    sel_flat = sel.transpose(0, 2, 1, 3).reshape(groups, top_k * tg,
+                                                 num_experts)
+    pos = jnp.cumsum(sel_flat, axis=1) - 1.0
+    pos = pos.reshape(groups, top_k, tg, num_experts).transpose(0, 2, 1, 3)
+    keep = (pos < cap) & (sel > 0)
+    pos = jnp.clip(pos, 0, cap - 1).astype(jnp.int32)
+
+    disp = jax.nn.one_hot(pos, cap, dtype=x.dtype) * \
+        keep[..., None].astype(x.dtype)            # (g, t, k, e, c)
+    disp_te = disp.sum(axis=2)                     # (g, t, e, c)
+    comb = (disp * top_w[..., None, None].astype(x.dtype)).sum(axis=2)
+
+    expert_in = jnp.einsum("gtec,gtd->egcd", disp_te, xg)
+    expert_out = experts_ffn(p["experts"],
+                             expert_in.reshape(num_experts, groups * cap, d),
+                             act).reshape(num_experts, groups, cap, d)
+    y = jnp.einsum("gtec,egcd->gtd", comb, expert_out)
+
+    metrics = {
+        "expert_load": expert_loads(top_i.reshape(t, top_k), num_experts),
+        "aux_loss": load_balance_loss(probs, top_i.reshape(t, top_k),
+                                      num_experts),
+        "dropped": jnp.asarray(top_k * t, jnp.float32)
+        - keep.astype(jnp.float32).sum(),
+        "router_logits": logits.reshape(t, num_experts),
+    }
+    return y.reshape(b, s, d), metrics
+
+
+def init_moe(key, d: int, spec, act: str, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"router": init_router(k1, d, spec.num_experts, dtype),
+            "experts": init_experts(k2, d, spec.d_ff, spec.num_experts, act,
+                                    dtype)}

@@ -1,0 +1,377 @@
+"""Recurrent sequence mixers: Mamba (selective SSM, arXiv:2312.00752 as used
+by Jamba arXiv:2403.19887) and xLSTM's sLSTM / mLSTM blocks
+(arXiv:2405.04517).
+
+Each mixer exposes:
+  init_*          -> params
+  *_seq(p, x)     -> (y, final_state)          # train / prefill over (B,S,D)
+  *_step(p, x, s) -> (y, new_state)            # single-token decode, O(1) state
+
+All recurrences are O(S) in sequence length — these are the sub-quadratic
+paths that make ``long_500k`` runnable (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+# ================================================================ Mamba
+
+
+def init_mamba(key, d: int, spec, dtype):
+    di = spec.expand * d
+    dt_rank = max(1, math.ceil(d / 16))
+    ks = jax.random.split(key, 7)
+    sd = 1.0 / math.sqrt(d)
+    a = jnp.tile(jnp.arange(1, spec.d_state + 1, dtype=jnp.float32)[None],
+                 (di, 1))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * sd,
+        "conv_w": jax.random.normal(ks[1], (spec.d_conv, di), dtype) * 0.1,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": jax.random.normal(ks[2], (di, dt_rank + 2 * spec.d_state),
+                                    dtype) / math.sqrt(di),
+        "dt_proj": jax.random.normal(ks[3], (dt_rank, di), dtype)
+        / math.sqrt(dt_rank),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of U(1e-3, 1e-1) midpoint
+            jnp.full((di,), 0.01, jnp.float32))).astype(dtype),
+        "a_log": jnp.log(a),                       # f32 (di, d_state)
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (di, d), dtype) / math.sqrt(di),
+    }
+
+
+def _mamba_ssm_params(p, xc, spec):
+    """xc: (..., di) conv output -> (dt, b, c) input-dependent SSM params."""
+    dt_rank = p["dt_proj"].shape[0]
+    proj = xc @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj"]
+                         + p["dt_bias"]).astype(jnp.float32)
+    b = proj[..., dt_rank:dt_rank + spec.d_state].astype(jnp.float32)
+    c = proj[..., dt_rank + spec.d_state:].astype(jnp.float32)
+    return dt, b, c
+
+
+# §Perf hillclimb levers (EXPERIMENTS.md): fuse the output contraction
+# into the chunk body (stored state shrinks x d_state), rematerialise
+# the chunk in the backward pass, and inline the (B,T,di,N) abar/bbar
+# construction into the chunk body so only the 16x smaller dt/b/c/xc
+# tensors are scan inputs.
+MAMBA_OPTS = {"fused_y": False, "chunk_remat": False, "inline_ab": False}
+
+
+def set_mamba_opts(**kw) -> None:
+    MAMBA_OPTS.update(kw)
+
+
+def _scan_linear_recurrence(a, b, h0, chunk: int = 128, c_proj=None):
+    """h_t = a_t * h_{t-1} + b_t over axis 1 (time). a/b: (B, T, di, N).
+
+    Chunked: associative scan within a chunk (parallel), lax.scan across
+    chunks (bounded memory for long sequences). If c_proj (B, T, N) is
+    given and fused_y is on, returns y = einsum(h, c) (B, T, di) directly
+    so the (B, T, di, N) hidden states are never stored."""
+    bsz, t = a.shape[0], a.shape[1]
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk -= 1
+    nc = t // chunk
+    fused = MAMBA_OPTS["fused_y"] and c_proj is not None
+    ar = a.reshape((bsz, nc, chunk) + a.shape[2:])
+    br = b.reshape((bsz, nc, chunk) + b.shape[2:])
+    xs = [ar.transpose((1, 0, 2) + tuple(range(3, ar.ndim))),
+          br.transpose((1, 0, 2) + tuple(range(3, br.ndim)))]
+    if fused:
+        cr = c_proj.reshape(bsz, nc, chunk, -1)
+        xs.append(cr.transpose(1, 0, 2, 3))
+
+    def combine(x, y):
+        (ax, bx), (ay, by) = x, y
+        return ax * ay, bx * ay + by
+
+    def outer(h, ab):
+        ac, bc = ab[0], ab[1]  # (B, chunk, ...)
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        hs = aa * h[:, None] + bb
+        if fused:
+            return hs[:, -1], jnp.einsum("bsdn,bsn->bsd", hs, ab[2])
+        return hs[:, -1], hs
+
+    if MAMBA_OPTS["chunk_remat"]:
+        outer = jax.checkpoint(outer)
+    hT, ys = jax.lax.scan(outer, h0, tuple(xs))
+    ys = ys.transpose((1, 0, 2) + tuple(range(3, ys.ndim)))
+    if fused:
+        return ys.reshape(bsz, t, -1), hT
+    return ys.reshape(a.shape), hT
+
+
+def _inline_chunk_scan(a, dt, b, c, xc, h0, chunk: int = 128):
+    """Selective scan with abar/bbar built INSIDE the chunk body (§Perf
+    P1-iter2): scan inputs are dt (B,T,di), b/c (B,T,N), xc (B,T,di) —
+    d_state-times smaller than the (B,T,di,N) tensors. Chunk body is
+    rematerialised; returns (y (B,T,di), hT)."""
+    bsz, t, di = dt.shape
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk -= 1
+    nc = t // chunk
+
+    def to_chunks(x):
+        return x.reshape((bsz, nc, chunk) + x.shape[2:]) \
+            .transpose((1, 0, 2) + tuple(range(3, x.ndim + 1)))
+
+    def combine(x, y):
+        (ax, bx), (ay, by) = x, y
+        return ax * ay, bx * ay + by
+
+    @jax.checkpoint
+    def outer(h, xs):
+        dtc, bc, cc, xcc = xs                       # (B, chunk, ...)
+        abar = jnp.exp(dtc[..., None] * a)          # (B, chunk, di, N)
+        bbar = dtc[..., None] * bc[..., None, :] * xcc[..., None]
+        aa, bb = jax.lax.associative_scan(combine, (abar, bbar), axis=1)
+        hs = aa * h[:, None] + bb
+        return hs[:, -1], jnp.einsum("bsdn,bsn->bsd", hs, cc)
+
+    hT, ys = jax.lax.scan(outer, h0, (to_chunks(dt), to_chunks(b),
+                                      to_chunks(c), to_chunks(xc)))
+    return ys.transpose(1, 0, 2, 3).reshape(bsz, t, di), hT
+
+
+def mamba_seq(p, x, spec):
+    """x: (B, S, D) -> (y, state) with state = {conv, ssm}."""
+    bsz, s, d = x.shape
+    di = p["in_proj"].shape[1] // 2
+    xz = x @ p["in_proj"]
+    xin, z = xz[..., :di], xz[..., di:]
+    # causal depthwise conv over time
+    dc = p["conv_w"].shape[0]
+    xpad = jnp.pad(xin, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + s] * p["conv_w"][i] for i in range(dc))
+    xc = jax.nn.silu(xc + p["conv_b"])
+
+    dt, b, c = _mamba_ssm_params(p, xc, spec)
+    a = -jnp.exp(p["a_log"])                              # (di, N)
+    h0 = jnp.zeros((bsz, di, spec.d_state), jnp.float32)
+    if MAMBA_OPTS["inline_ab"]:
+        y, hT = _inline_chunk_scan(a, dt, b, c,
+                                   xc.astype(jnp.float32), h0)
+    elif MAMBA_OPTS["fused_y"]:
+        abar = jnp.exp(dt[..., None] * a)                 # (B,S,di,N)
+        bbar = dt[..., None] * b[..., None, :] * \
+            xc.astype(jnp.float32)[..., None]
+        y, hT = _scan_linear_recurrence(abar, bbar, h0, c_proj=c)
+    else:
+        abar = jnp.exp(dt[..., None] * a)
+        bbar = dt[..., None] * b[..., None, :] * \
+            xc.astype(jnp.float32)[..., None]
+        hs, hT = _scan_linear_recurrence(abar, bbar, h0)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, c)
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    state = {"conv": xpad[:, -(dc - 1):].astype(x.dtype) if dc > 1 else
+             jnp.zeros((bsz, 0, di), x.dtype), "ssm": hT}
+    return y, state
+
+
+def mamba_step(p, x, state, spec):
+    """x: (B, 1, D) single decode token."""
+    bsz = x.shape[0]
+    di = p["in_proj"].shape[1] // 2
+    dc = p["conv_w"].shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    xin, z = xz[..., :di], xz[..., di:]
+    window = jnp.concatenate([state["conv"], xin[:, None]], axis=1)  # (B,dc,di)
+    xc = jax.nn.silu(jnp.einsum("bcd,cd->bd", window, p["conv_w"])
+                     + p["conv_b"])
+    dt, b, c = _mamba_ssm_params(p, xc, spec)
+    a = -jnp.exp(p["a_log"])
+    abar = jnp.exp(dt[..., None] * a)                     # (B,di,N)
+    bbar = dt[..., None] * b[..., None, :] * xc.astype(jnp.float32)[..., None]
+    h = abar * state["ssm"] + bbar
+    y = jnp.einsum("bdn,bn->bd", h, c) + xc.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y[:, None], {"conv": window[:, 1:], "ssm": h}
+
+
+def init_mamba_state(p, cfg, batch: int):
+    di = p["in_proj"].shape[1] // 2
+    dc = p["conv_w"].shape[0]
+    return {"conv": jnp.zeros((batch, dc - 1, di),
+                              p["in_proj"].dtype),
+            "ssm": jnp.zeros((batch, di, cfg.ssm.d_state), jnp.float32)}
+
+
+# ================================================================ mLSTM
+
+
+def init_mlstm(key, d: int, num_heads: int, expand: int, dtype):
+    di = expand * d
+    ks = jax.random.split(key, 7)
+    sd = 1.0 / math.sqrt(d)
+    sdi = 1.0 / math.sqrt(di)
+    return {
+        "up_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * sd,
+        "wq": jax.random.normal(ks[1], (di, di), dtype) * sdi,
+        "wk": jax.random.normal(ks[2], (di, di), dtype) * sdi,
+        "wv": jax.random.normal(ks[3], (di, di), dtype) * sdi,
+        "w_if": jax.random.normal(ks[4], (di, 2 * num_heads), dtype) * sdi,
+        "b_i": jnp.full((num_heads,), -3.0, jnp.float32),
+        "b_f": jnp.full((num_heads,), 3.0, jnp.float32),
+        "down_proj": jax.random.normal(ks[6], (di, d), dtype) * sdi,
+    }
+
+
+def _mlstm_gates(p, xi, num_heads: int):
+    g = (xi @ p["w_if"]).astype(jnp.float32)
+    log_i = g[..., :num_heads] + p["b_i"]            # pre-activation i
+    log_f = jax.nn.log_sigmoid(g[..., num_heads:] + p["b_f"])
+    return log_i, log_f
+
+
+def _mlstm_recurrence(q, k, v, log_i, log_f, state):
+    """Stabilized mLSTM recurrence over one step.
+    q,k,v: (B,H,hd); gates: (B,H); state = (C (B,H,hd,hd), n (B,H,hd),
+    m (B,H))."""
+    c, n, m = state
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_ = jnp.exp(log_i - m_new)
+    f_ = jnp.exp(log_f + m - m_new)
+    c = f_[..., None, None] * c + i_[..., None, None] * \
+        (k[..., :, None] * v[..., None, :])
+    n = f_[..., None] * n + i_[..., None] * k
+    num = jnp.einsum("bhij,bhi->bhj", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n, q)),
+                      jnp.exp(-m_new))
+    return num / den[..., None], (c, n, m_new)
+
+
+def _mlstm_qkv(p, xi, num_heads: int):
+    di = xi.shape[-1]
+    hd = di // num_heads
+    shp = xi.shape[:-1] + (num_heads, hd)
+    q = (xi @ p["wq"]).reshape(shp).astype(jnp.float32) / math.sqrt(hd)
+    k = (xi @ p["wk"]).reshape(shp).astype(jnp.float32) / math.sqrt(hd)
+    v = (xi @ p["wv"]).reshape(shp).astype(jnp.float32)
+    return q, k, v
+
+
+def mlstm_seq(p, x, num_heads: int):
+    bsz, s, d = x.shape
+    di = p["up_proj"].shape[1] // 2
+    u = x @ p["up_proj"]
+    xi, z = u[..., :di], u[..., di:]
+    q, k, v = _mlstm_qkv(p, xi, num_heads)
+    log_i, log_f = _mlstm_gates(p, xi, num_heads)
+    hd = di // num_heads
+    s0 = (jnp.zeros((bsz, num_heads, hd, hd), jnp.float32),
+          jnp.zeros((bsz, num_heads, hd), jnp.float32),
+          jnp.full((bsz, num_heads), -1e30, jnp.float32))
+
+    def step(st, inp):
+        qt, kt, vt, li, lf = inp
+        h, st = _mlstm_recurrence(qt, kt, vt, li, lf, st)
+        return st, h
+
+    sT, hs = jax.lax.scan(
+        step, s0, (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+                   v.transpose(1, 0, 2, 3), log_i.transpose(1, 0, 2),
+                   log_f.transpose(1, 0, 2)))
+    h = hs.transpose(1, 0, 2, 3).reshape(bsz, s, di).astype(x.dtype)
+    return (h * jax.nn.silu(z)) @ p["down_proj"], sT
+
+
+def mlstm_step(p, x, state, num_heads: int):
+    di = p["up_proj"].shape[1] // 2
+    u = x[:, 0] @ p["up_proj"]
+    xi, z = u[..., :di], u[..., di:]
+    q, k, v = _mlstm_qkv(p, xi, num_heads)
+    log_i, log_f = _mlstm_gates(p, xi, num_heads)
+    h, state = _mlstm_recurrence(q, k, v, log_i, log_f, state)
+    h = h.reshape(x.shape[0], di).astype(x.dtype)
+    return ((h * jax.nn.silu(z)) @ p["down_proj"])[:, None], state
+
+
+def init_mlstm_state(cfg, batch: int, expand: int):
+    di = expand * cfg.d_model
+    h = cfg.num_heads
+    hd = di // h
+    return (jnp.zeros((batch, h, hd, hd), jnp.float32),
+            jnp.zeros((batch, h, hd), jnp.float32),
+            jnp.full((batch, h), -1e30, jnp.float32))
+
+
+# ================================================================ sLSTM
+
+
+def init_slstm(key, d: int, num_heads: int, dtype):
+    ks = jax.random.split(key, 4)
+    sd = 1.0 / math.sqrt(d)
+    hd = d // num_heads
+    return {
+        "w_in": jax.random.normal(ks[0], (d, 4 * d), dtype) * sd,    # z,i,f,o
+        "r": jax.random.normal(ks[1], (num_heads, hd, 4 * hd), dtype)
+        / math.sqrt(hd),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "w_ff": jax.random.normal(ks[2], (d, 2 * d), dtype) * sd,
+        "w_ff_out": jax.random.normal(ks[3], (d, d), dtype) / math.sqrt(d),
+    }
+
+
+def _slstm_cell(p, xt, state, num_heads: int):
+    """One sLSTM step with exponential gating + stabilizer (xLSTM eq. 8-16).
+    xt: (B, D); state = (c, n, m, h) each (B, D) (m: (B, H))."""
+    c, n, m, h = state
+    d = xt.shape[-1]
+    hd = d // num_heads
+    hh = h.reshape(h.shape[0], num_heads, hd)
+    rec = jnp.einsum("bhk,hkj->bhj", hh, p["r"]).reshape(h.shape[0], 4 * d)
+    pre = (xt @ p["w_in"]).astype(jnp.float32) + rec.astype(jnp.float32) \
+        + p["bias"]
+    z, gi, gf, go = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    # per-head stabilizer over the head's scalar gates (mean-pooled)
+    gi_h = gi.reshape(-1, num_heads, hd)
+    gf_h = jax.nn.log_sigmoid(gf).reshape(-1, num_heads, hd)
+    m_new = jnp.maximum(gf_h.mean(-1) + m, gi_h.mean(-1))
+    i_ = jnp.exp(gi_h - m_new[..., None]).reshape(gi.shape)
+    f_ = jnp.exp(gf_h + (m - m_new)[..., None]).reshape(gf.shape)
+    c = f_ * c + i_ * z
+    n = f_ * n + i_
+    h_new = jax.nn.sigmoid(go) * c / jnp.maximum(jnp.abs(n), 1.0)
+    return h_new, (c, n, m_new, h_new)
+
+
+def slstm_seq(p, x, num_heads: int):
+    bsz, s, d = x.shape
+    st0 = init_slstm_state(d, num_heads, bsz)
+
+    def step(st, xt):
+        h, st = _slstm_cell(p, xt, st, num_heads)
+        return st, h
+
+    sT, hs = jax.lax.scan(step, st0, x.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    ff = h @ p["w_ff"]
+    half = d
+    y = (jax.nn.gelu(ff[..., :half]) * ff[..., half:]) @ p["w_ff_out"]
+    return y, sT
+
+
+def slstm_step(p, x, state, num_heads: int):
+    h, state = _slstm_cell(p, x[:, 0], state, num_heads)
+    h = h[:, None].astype(x.dtype)
+    d = x.shape[-1]
+    ff = h @ p["w_ff"]
+    y = (jax.nn.gelu(ff[..., :d]) * ff[..., d:]) @ p["w_ff_out"]
+    return y, state
+
+
+def init_slstm_state(d: int, num_heads: int, batch: int):
+    return (jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32),
+            jnp.full((batch, num_heads), -1e30, jnp.float32),
+            jnp.zeros((batch, d), jnp.float32))

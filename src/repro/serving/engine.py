@@ -1,0 +1,151 @@
+"""Serving engine: continuous-batch prefill/decode over the real JAX model
+with the MoEless control plane attached.
+
+Per decode iteration (paper §3.2 workflow):
+  step 1 — the Expert Load Predictor estimates the next iteration's
+           per-layer loads from this iteration's gate inputs,
+  step 2 — the Expert Scaler (Alg. 1) sizes replicas,
+  step 3 — the Expert Placer (Alg. 2) assigns them to EP ranks with
+           warm-start reuse via the serverless pool,
+  step 4 — plans become EP slot tables (repro.distributed.ep) and each
+           expert's load splits round-robin over its replicas.
+
+The compute path runs the capacity-dispatch model (single host) while the
+control plane is exercised end-to-end; `plan_tables` exposes the live
+slot tables that the shard_map EP layer consumes on a pod.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import predictor as PRED
+from repro.core.costmodel import derive_coeffs
+from repro.core.placer import place_layer
+from repro.core.scaler import scale_layer
+from repro.core.serverless import ServerlessExpertPool
+from repro.distributed.ep import ep_factorisation, plan_to_tables
+from repro.models import model as M
+from repro.models import transformer as T
+
+
+@dataclass
+class MoElessController:
+    """The paper's control plane bound to a real model."""
+    cfg: "ModelConfig"
+    num_devices: int = 8
+    cv_threshold: float = 0.2
+    prediction_distance: int = 1
+    slots_per_device: int = 0
+    predictor: "PRED.LoadPredictor" = None
+    prev_plans: dict = field(default_factory=dict)
+    pools: dict = field(default_factory=dict)
+    plans: list = field(default_factory=list)
+
+    def __post_init__(self):
+        e = self.cfg.moe.num_experts
+        if not self.slots_per_device:
+            self.slots_per_device = max(2, (2 * e) // self.num_devices + 1)
+        self.coeffs = derive_coeffs(self.cfg)
+
+    def pool(self, layer: int) -> ServerlessExpertPool:
+        if layer not in self.pools:
+            self.pools[layer] = ServerlessExpertPool(
+                expert_bytes=self.coeffs.expert_bytes)
+        return self.pools[layer]
+
+    def plan_iteration(self, t: float, gate_inputs, actual_loads):
+        """gate_inputs: (Lm, N, D) this iteration's gate inputs;
+        actual_loads: (Lm, E). Returns list[LayerPlan] for the next
+        iteration (predicted loads d layers ahead per paper §4.1)."""
+        lm, e = actual_loads.shape
+        d = self.prediction_distance
+        plans = []
+        for l in range(lm):
+            if self.predictor is not None and l >= d:
+                pred = self.predictor.predict_loads(
+                    l, jnp.asarray(gate_inputs[l - d]), self.cfg.moe.top_k)
+            else:
+                pred = np.asarray(actual_loads[l])
+            pred = np.maximum(np.asarray(pred, np.float64), 0)
+            reps = scale_layer(pred, cv_threshold=self.cv_threshold,
+                               max_total_replicas=2 * e)
+            pool = self.pool(l)
+            plan = place_layer(
+                pred, reps, self.num_devices,
+                prev=self.prev_plans.get(l), alive=set(pool.instances),
+                max_replicas_per_device=self.slots_per_device)
+            self.prev_plans[l] = plan
+            pool.commit(plan, t, 0.05, 0.02)
+            plans.append(plan)
+        self.plans = plans
+        return plans
+
+    def plan_tables(self, layer: int):
+        """Slot tables for the shard_map EP layer (distributed/ep.py)."""
+        ep, _ = ep_factorisation(self.cfg.moe.num_experts, self.num_devices)
+        return plan_to_tables(self.plans[layer], ep=ep,
+                              slots_per_device=self.slots_per_device)
+
+
+class ServingEngine:
+    """Prefill + token-by-token decode with KV caches; optionally drives a
+    MoElessController each iteration."""
+
+    def __init__(self, cfg, params, *, max_len: int = 512,
+                 controller: MoElessController | None = None,
+                 window: int = 0):
+        self.cfg, self.params = cfg, params
+        self.max_len = max_len
+        self.controller = controller
+        self.window = window
+        collect = controller is not None and cfg.is_moe
+        self._step = jax.jit(partial(
+            T.decode_step, cfg, window=window, collect=collect),
+            static_argnames=())
+        self.iteration = 0
+
+    def new_cache(self, batch_size: int):
+        return T.init_cache(self.cfg, self.params, batch_size, self.max_len)
+
+    def prefill(self, batch):
+        """batch['tokens']: (B, S_prompt). Returns (next_tokens, cache)."""
+        bsz = batch["tokens"].shape[0]
+        cache = self.new_cache(bsz)
+        logits, cache, metrics = self._step(
+            self.params, batch, cache, jnp.asarray(0, jnp.int32))
+        self._drive_controller(metrics)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)
+        return next_tok, cache, batch["tokens"].shape[1]
+
+    def decode(self, tokens, cache, cache_len: int, steps: int,
+               extra=None):
+        """Greedy decode `steps` tokens. Returns (tokens (B, steps), cache)."""
+        out = []
+        cur = tokens
+        for _ in range(steps):
+            batch = {"tokens": cur[:, None]}
+            if extra:
+                batch.update(extra)
+            logits, cache, metrics = self._step(
+                self.params, batch, cache, jnp.asarray(cache_len, jnp.int32))
+            self._drive_controller(metrics)
+            cur = jnp.argmax(logits[:, -1], axis=-1)
+            out.append(cur)
+            cache_len += 1
+            self.iteration += 1
+        return jnp.stack(out, axis=1), cache, cache_len
+
+    def _drive_controller(self, metrics):
+        if self.controller is None or "expert_load" not in metrics:
+            return
+        gi = metrics.get("gate_input")
+        if gi is not None:
+            gi = np.asarray(gi.reshape(gi.shape[0], -1, gi.shape[-1]),
+                            np.float32)
+        self.controller.plan_iteration(
+            float(self.iteration), gi, np.asarray(metrics["expert_load"]))

@@ -1,0 +1,56 @@
+"""Pytree checkpointing (numpy .npz based — no orbax in this env).
+
+Flattens any pytree of arrays with '/'-joined key paths; saves/restores
+exactly, including optimizer state and the training step counter.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    out = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        a = np.asarray(leaf)
+        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+            a = a.astype(np.float32)   # npz can't store bf16; restore
+        out[key] = a                   # casts back to the model dtype
+    return out
+
+
+def save(path, tree, *, step: int = 0, extra: dict | None = None) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    meta = {"step": step, "keys": sorted(flat), **(extra or {})}
+    path.with_suffix(".meta.json").write_text(json.dumps(meta))
+
+
+def restore(path, like):
+    """Restore into the structure of `like` (same treedef)."""
+    path = pathlib.Path(path)
+    data = np.load(path if path.suffix == ".npz"
+                   else path.with_suffix(".npz"))
+    flat_like = _flatten(like)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in p)
+            for p, _ in jax.tree_util.tree_leaves_with_path(like)]
+    assert set(keys) == set(data.files), "checkpoint/model tree mismatch"
+    new_leaves = [jax.numpy.asarray(data[k]).astype(l.dtype)
+                  for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def latest_step(path) -> int:
+    meta = pathlib.Path(path).with_suffix(".meta.json")
+    if not meta.exists():
+        return 0
+    return json.loads(meta.read_text()).get("step", 0)

@@ -1,0 +1,100 @@
+"""Minimal pytree optimizers (no optax in this environment): AdamW + SGD,
+with global-norm clipping and a cosine/linear LR schedule."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), n
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable   # (params, grads, state) -> (params, state)
+
+
+def adamw(lr: float | Callable = 1e-3, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: Optional[float] = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"mu": zeros,
+                "nu": jax.tree.map(jnp.copy, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        lr_t = lr_fn(step)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            mu_hat = mu / (1 - b1 ** step.astype(jnp.float32))
+            nu_hat = nu / (1 - b2 ** step.astype(jnp.float32))
+            delta = mu_hat / (jnp.sqrt(nu_hat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), \
+                mu, nu
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_mu = tdef.flatten_up_to(state["mu"])
+        flat_nu = tdef.flatten_up_to(state["nu"])
+        out = [upd(p, g, m, n) for p, g, m, n
+               in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_mu = tdef.unflatten([o[1] for o in out])
+        new_nu = tdef.unflatten([o[2] for o in out])
+        return new_p, {"mu": new_mu, "nu": new_nu, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.9,
+        clip_norm: Optional[float] = None) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(params, grads, state):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        m = jax.tree.map(lambda mm, g: momentum * mm
+                         + g.astype(jnp.float32), state["m"], grads)
+        params = jax.tree.map(
+            lambda p, mm: (p.astype(jnp.float32) - lr * mm).astype(p.dtype),
+            params, m)
+        return params, {"m": m}
+
+    return Optimizer(init=init, update=update)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return fn

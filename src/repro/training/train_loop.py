@@ -1,0 +1,63 @@
+"""Training loop: jit'd train step + data pipeline + checkpointing +
+expert-load logging (the training-side view of the paper's Fig. 1 skew)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.training.checkpoint import restore, save
+from repro.training.data import DataConfig, TokenStream
+from repro.training.optimizer import adamw, cosine_schedule
+
+
+@dataclass
+class TrainResult:
+    losses: list = field(default_factory=list)
+    expert_loads: list = field(default_factory=list)
+    steps_per_s: float = 0.0
+
+
+def train(cfg, *, steps: int = 50, seq_len: int = 128, global_batch: int = 8,
+          lr: float = 3e-4, seed: int = 0, microbatches: int = 1,
+          checkpoint_path=None, checkpoint_every: int = 0,
+          log_every: int = 10, verbose: bool = True) -> TrainResult:
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    opt = adamw(cosine_schedule(lr, warmup=max(1, steps // 10), total=steps),
+                weight_decay=0.01)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(M.make_train_step(cfg, opt, microbatches=microbatches))
+    stream = TokenStream(DataConfig(cfg.vocab_size, seq_len, global_batch,
+                                    seed=seed))
+    start = 0
+    if checkpoint_path is not None:
+        from repro.training.checkpoint import latest_step
+        import pathlib
+        if pathlib.Path(str(checkpoint_path) + ".npz").exists():
+            params = restore(str(checkpoint_path) + ".npz", params)
+            start = latest_step(str(checkpoint_path) + ".npz")
+
+    res = TrainResult()
+    t0 = time.time()
+    for step in range(start, steps):
+        batch = jax.tree.map(jnp.asarray, stream.batch(step))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        res.losses.append(loss)
+        if "expert_load" in metrics:
+            res.expert_loads.append(np.asarray(metrics["expert_load"]))
+        if verbose and step % log_every == 0:
+            print(f"step {step:4d} loss={loss:.4f} "
+                  f"aux={float(metrics.get('aux_loss', 0.0)):.4f}")
+        if checkpoint_path and checkpoint_every \
+                and (step + 1) % checkpoint_every == 0:
+            save(checkpoint_path, params, step=step + 1)
+    res.steps_per_s = (steps - start) / max(time.time() - t0, 1e-9)
+    if checkpoint_path:
+        save(checkpoint_path, params, step=steps)
+    return res, params

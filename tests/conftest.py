@@ -1,0 +1,16 @@
+import os
+import sys
+
+# keep CPU math deterministic & single-device (the dry-run manages its own
+# 512-device flag in a separate process; never set it here per spec)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_default_prng_impl", "threefry2x32")
+
+
+def pytest_addoption(parser):
+    parser.addoption("--run-slow", action="store_true", default=False)

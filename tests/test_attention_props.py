@@ -1,0 +1,81 @@
+"""Attention-layer properties: M-RoPE text degeneracy, sliding-window ring
+cache vs full attention, chunk invariance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(4)
+
+
+def test_mrope_degenerates_to_rope_for_text():
+    """Identical position ids on all three M-RoPE axes == 1-D RoPE
+    (arXiv:2409.12191 property)."""
+    hd, theta = 64, 1e4
+    pos = jnp.arange(12)[None]          # (1, 12)
+    cos1, sin1 = L.rope_cos_sin(pos, hd, theta)
+    pos3 = jnp.repeat(pos[..., None], 3, axis=-1)
+    cos3, sin3 = L.mrope_cos_sin(pos3, hd, theta)
+    np.testing.assert_allclose(np.asarray(cos1), np.asarray(cos3),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sin1), np.asarray(sin3),
+                               atol=1e-6)
+
+
+@given(st.integers(8, 32), st.integers(2, 8))
+@settings(max_examples=10, deadline=None)
+def test_window_equals_full_when_window_covers_seq(s, w_extra):
+    """Sliding window >= sequence length must equal full attention."""
+    b, h, hd = 1, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, hd), jnp.float32)
+    pos = jnp.arange(s)[None]
+    full = L.attention(q, k, v, pos, pos, causal=True, window=0, chunk=8)
+    win = L.attention(q, k, v, pos, pos, causal=True, window=s + w_extra,
+                      chunk=8)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(win),
+                               atol=1e-5)
+
+
+def test_chunk_size_invariance():
+    b, s, h, hd = 2, 40, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    base = L.attention(q, k, v, pos, pos, causal=True, chunk=40)
+    for c in (8, 16, 64):
+        out = L.attention(q, k, v, pos, pos, causal=True, chunk=c)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   atol=1e-5)
+
+
+def test_ring_cache_window_decode_matches_direct():
+    """Ring-buffer windowed decode equals direct windowed attention over
+    the trailing `window` tokens, even after the ring wraps."""
+    from repro.configs import get_config
+    cfg = get_config("qwen3-32b", smoke=True).with_(dtype="float32",
+                                                    num_layers=2)
+    from repro.models import model as M, transformer as T
+    params = M.init_params(cfg, KEY)
+    window = 8
+    n_tok = 14                      # wraps the ring (cache size = window)
+    toks = jax.random.randint(KEY, (1, n_tok), 0, cfg.vocab_size,
+                              jnp.int32)
+    # windowed decode through the ring cache, token by token
+    cache = T.init_cache(cfg, params, 1, window)
+    step = M.make_serve_step(cfg, window=window)
+    logits_ring = None
+    for t in range(n_tok):
+        logits_ring, cache = step(params, {"tokens": toks[:, t:t + 1]},
+                                  cache, jnp.asarray(t, jnp.int32))
+    # direct forward with the same sliding window
+    logits_full, _ = T.forward(cfg, params, {"tokens": toks},
+                               window=window)
+    np.testing.assert_allclose(np.asarray(logits_ring[:, 0]),
+                               np.asarray(logits_full[:, -1]), atol=2e-3)

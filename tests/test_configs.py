@@ -1,0 +1,77 @@
+"""Config registry: coverage of the assigned architectures, published
+parameter counts, and smoke-variant constraints."""
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models.model import count_params_analytic
+
+ASSIGNED = [
+    "qwen3-32b", "grok-1-314b", "jamba-v0.1-52b", "qwen2-vl-2b",
+    "stablelm-12b", "qwen2-72b", "command-r-plus-104b", "xlstm-125m",
+    "whisper-base", "llama4-maverick-400b-a17b",
+]
+PAPER = ["mixtral-8x7b", "phi-3.5-moe"]
+
+# published totals (billions) with tolerance — embeddings/head variations
+PUBLISHED_B = {
+    "qwen3-32b": (32.8, 0.15), "grok-1-314b": (314, 0.12),
+    "jamba-v0.1-52b": (52, 0.15), "qwen2-72b": (72.7, 0.1),
+    "command-r-plus-104b": (104, 0.1), "stablelm-12b": (12.1, 0.15),
+    "mixtral-8x7b": (46.7, 0.05), "phi-3.5-moe": (42, 0.05),
+    "llama4-maverick-400b-a17b": (400, 0.12),
+    "qwen2-vl-2b": (2.0, 0.25),
+}
+
+
+def test_all_assigned_archs_registered():
+    archs = list_archs()
+    for a in ASSIGNED + PAPER:
+        assert a in archs, a
+
+
+@pytest.mark.parametrize("arch", sorted(PUBLISHED_B))
+def test_param_counts_match_published(arch):
+    target, tol = PUBLISHED_B[arch]
+    n = count_params_analytic(get_config(arch)) / 1e9
+    assert abs(n - target) / target <= tol, f"{arch}: {n:.1f}B vs {target}B"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED + PAPER)
+def test_smoke_configs_are_reduced(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.num_layers <= 2 or (cfg.encdec and cfg.num_layers <= 2)
+    assert cfg.d_model <= 512
+    if cfg.is_moe:
+        assert cfg.moe.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ASSIGNED + PAPER)
+def test_full_config_exact_dims(arch):
+    cfg = get_config(arch)
+    spec = {
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "phi-3.5-moe": (32, 4096, 32, 8, 6400, 32064),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.moe.d_ff if (cfg.is_moe and cfg.d_ff == cfg.moe.d_ff)
+           else cfg.d_ff, cfg.vocab_size)
+    assert got == spec, f"{arch}: {got} != {spec}"
+
+
+def test_moe_specs():
+    assert get_config("grok-1-314b").moe.num_experts == 8
+    assert get_config("grok-1-314b").moe.top_k == 2
+    assert get_config("llama4-maverick-400b-a17b").moe.num_experts == 128
+    assert get_config("llama4-maverick-400b-a17b").moe.top_k == 1
+    assert get_config("jamba-v0.1-52b").moe.num_experts == 16
+    assert get_config("jamba-v0.1-52b").attn_every_n == 8

@@ -1,0 +1,87 @@
+"""Expert Load Predictor (paper §4.1): speculative prediction accuracy,
+layer-aware fine-tuning improvement, Pearson correlation (Fig. 12)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import predictor as P
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("mixtral-8x7b", smoke=True).with_(num_layers=6)
+    params = M.init_params(cfg, KEY)
+    batches = [jax.random.randint(jax.random.fold_in(KEY, i), (4, 48), 0,
+                                  cfg.vocab_size) for i in range(3)]
+    ds = P.collect_gate_dataset(cfg, params, batches)
+    train, test = P.split_dataset(ds)
+    return cfg, params, train, test
+
+
+def test_dataset_shapes(setup):
+    cfg, params, train, test = setup
+    lm = cfg.num_layers
+    assert train["inputs"].shape[0] == lm
+    assert train["logits"].shape[-1] == cfg.moe.num_experts
+    n = train["inputs"].shape[1] + test["inputs"].shape[1]
+    assert n == 3 * 4 * 48
+
+
+def test_distance_zero_is_exact(setup):
+    """A gate replica fed its own layer's inputs reproduces the router."""
+    cfg, params, train, test = setup
+    pred = P.from_gates(cfg, params, distance=1)
+    for l in range(cfg.num_layers):
+        logits = pred.predict_logits(l, jnp.asarray(test["inputs"][l]))
+        acc = P.topk_overlap_accuracy(
+            logits, jnp.asarray(test["logits"][l]), cfg.moe.top_k)
+        # bf16 router vs f32 replica: rare top-k ties flip -> ~0.997
+        assert acc > 0.98
+
+
+def test_finetune_improves_low_layers(setup):
+    cfg, params, train, test = setup
+    pred = P.from_gates(cfg, params, distance=2)
+    acc0 = P.profile_accuracy(pred, test, cfg.moe.top_k)
+    ft = P.finetune(pred, train, test, cfg.moe.top_k, threshold=0.85,
+                    steps=120)
+    acc1 = P.profile_accuracy(ft, test, cfg.moe.top_k)
+    # layer-aware: only layers under threshold were touched
+    untouched = [l for l in range(2, cfg.num_layers)
+                 if l not in ft.finetuned_layers]
+    for l in untouched:
+        assert acc0[l] >= 0.85
+    if ft.finetuned_layers:
+        sel = ft.finetuned_layers
+        assert np.mean(acc1[sel]) > np.mean(acc0[sel]), \
+            (acc0[sel], acc1[sel])
+
+
+def test_predicted_loads_correlate(setup):
+    cfg, params, train, test = setup
+    pred = P.finetune(P.from_gates(cfg, params, distance=1), train, test,
+                      cfg.moe.top_k, threshold=0.9, steps=100)
+    d = 1
+    cors = []
+    for l in range(d, cfg.num_layers):
+        hid = jnp.asarray(test["inputs"][l - d])
+        pl = pred.predict_loads(l, hid, cfg.moe.top_k)
+        _, ti = jax.lax.top_k(jnp.asarray(test["logits"][l]),
+                              cfg.moe.top_k)
+        actual = np.asarray(jnp.bincount(ti.reshape(-1),
+                                         length=cfg.moe.num_experts))
+        cors.append(P.load_correlation(pl, actual))
+    assert np.mean(cors) > 0.5, cors
+
+
+def test_predictor_memory_matches_gates(setup):
+    """Table 2: 'ours' footprint == gate replica footprint (tiny)."""
+    cfg, params, train, test = setup
+    pred = P.from_gates(cfg, params, distance=1)
+    expected = cfg.num_layers * cfg.d_model * cfg.moe.num_experts * 4
+    assert pred.param_bytes == expected

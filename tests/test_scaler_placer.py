@@ -1,0 +1,99 @@
+"""Property-based tests (hypothesis) for the paper's Algorithms 1 & 2."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placer import place_layer, placement_migrations
+from repro.core.plan import static_plan
+from repro.core.scaler import coefficient_of_variation, scale_layer
+
+loads_st = st.lists(st.floats(0, 1e6, allow_nan=False), min_size=2,
+                    max_size=64).map(np.asarray)
+
+
+@given(loads_st, st.integers(0, 3))
+@settings(max_examples=60, deadline=None)
+def test_scaler_invariants(loads, cap_mult):
+    e = loads.shape[0]
+    cap = e * (1 + cap_mult)
+    reps = scale_layer(loads, cv_threshold=0.2, max_total_replicas=cap)
+    assert (reps >= 1).all()
+    assert reps.sum() <= max(cap, e)
+    # replicating never increases the max per-replica load
+    assert (loads / reps).max() <= loads.max() + 1e-9
+
+
+@given(loads_st)
+@settings(max_examples=60, deadline=None)
+def test_scaler_reduces_cv(loads):
+    reps = scale_layer(loads, cv_threshold=0.2,
+                       max_total_replicas=4 * loads.shape[0])
+    before = coefficient_of_variation(loads)
+    after = coefficient_of_variation(np.repeat(loads / reps, reps))
+    assert after <= before + 1e-9
+
+
+@given(loads_st, st.integers(2, 16))
+@settings(max_examples=60, deadline=None)
+def test_placer_conserves_load(loads, g):
+    reps = scale_layer(loads, max_total_replicas=2 * loads.shape[0])
+    plan = place_layer(loads, reps, g)
+    np.testing.assert_allclose(plan.per_device_load(loads).sum(),
+                               loads.sum(), rtol=1e-9)
+    # every replica placed exactly once, replicas of one expert on
+    # distinct devices (when enough devices exist)
+    for e in range(loads.shape[0]):
+        assert len(plan.placement[e]) == reps[e]
+        if reps[e] <= g:
+            assert len(set(plan.placement[e])) == reps[e]
+
+
+@given(loads_st, st.integers(2, 8))
+@settings(max_examples=40, deadline=None)
+def test_placer_never_much_worse_than_static(loads, g):
+    """Greedy JSQ with the distinct-device-per-expert constraint is not
+    universally dominant (hypothesis found a 2-in-173k adversarial tie),
+    but it must never be more than marginally worse than static EP."""
+    e = loads.shape[0]
+    reps = scale_layer(loads, cv_threshold=0.2, max_total_replicas=2 * e)
+    plan = place_layer(loads, reps, g)
+    static = static_plan(e, g)
+    assert plan.per_device_load(loads).max() \
+        <= static.per_device_load(loads).max() * 1.01 + 1e-6
+
+
+def test_placer_beats_static_on_skewed_loads():
+    """On the skewed distributions the paper targets (one hot expert),
+    the planned placement strictly improves the bottleneck device."""
+    for g in (2, 4, 8):
+        for hot in (10.0, 50.0, 200.0):
+            loads = np.array([hot * 100.0] + [100.0] * 7)
+            reps = scale_layer(loads, cv_threshold=0.2,
+                               max_total_replicas=16)
+            plan = place_layer(loads, reps, g)
+            static = static_plan(8, g)
+            assert plan.per_device_load(loads).max() \
+                < static.per_device_load(loads).max()
+
+
+@given(loads_st, st.integers(2, 8))
+@settings(max_examples=40, deadline=None)
+def test_warm_start_reuse(loads, g):
+    """Placing twice with identical loads reuses all previous placements
+    (zero migrations, paper §4.3)."""
+    e = loads.shape[0]
+    reps = scale_layer(loads, max_total_replicas=2 * e)
+    p1 = place_layer(loads, reps, g)
+    p2 = place_layer(loads, reps, g, prev=p1)
+    assert placement_migrations(p1, p2) == 0
+
+
+def test_slot_tables_roundtrip():
+    loads = np.array([100.0, 10, 10, 10])
+    reps = scale_layer(loads, max_total_replicas=8)
+    plan = place_layer(loads, reps, 4)
+    se, sd, sv, nrep, start = plan.slot_tables(16)
+    assert sv.sum() == plan.total_replicas
+    for e in range(4):
+        for j in range(int(nrep[e])):
+            s = start[e] + j
+            assert se[s] == e and sv[s]

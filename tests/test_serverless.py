@@ -1,0 +1,49 @@
+"""Serverless expert-function lifecycle: cold/warm/prewarm transitions,
+keep-alive reaping, metering."""
+import numpy as np
+
+from repro.core.plan import static_plan
+from repro.core.serverless import ServerlessExpertPool
+
+
+def mk_pool(keep_alive=10.0):
+    return ServerlessExpertPool(expert_bytes=1e8, keep_alive=keep_alive)
+
+
+def test_cold_then_warm():
+    pool = mk_pool()
+    plan = static_plan(4, 2)
+    ready = pool.commit(plan, now=0.0, exec_time=0.1, lead_time=0.0)
+    assert ready == set()                     # nothing hidden: all cold
+    assert pool.stats.cold_starts == 4
+    ready = pool.commit(plan, now=1.0, exec_time=0.1, lead_time=0.0)
+    assert len(ready) == 4                    # all warm now
+    assert pool.stats.warm_starts == 4
+
+
+def test_prewarm_hides_cold_start():
+    pool = mk_pool()
+    plan = static_plan(4, 2)
+    cs = pool.cold_start_latency()
+    ready = pool.commit(plan, now=0.0, exec_time=0.1, lead_time=cs * 2)
+    assert len(ready) == 4
+    assert pool.stats.prewarmed == 4
+    assert pool.stats.cold_starts == 0
+
+
+def test_keep_alive_reaping():
+    pool = mk_pool(keep_alive=5.0)
+    plan = static_plan(2, 2)
+    pool.commit(plan, now=0.0, exec_time=0.0, lead_time=100.0)
+    assert pool.resident_bytes(1.0) == 2e8
+    # instances were last used at t=100; they survive until 105
+    assert pool.resident_bytes(104.0) == 2e8
+    assert pool.resident_bytes(106.0) == 0.0
+
+
+def test_metering_accumulates():
+    pool = mk_pool(keep_alive=1.0)
+    plan = static_plan(1, 1)
+    pool.commit(plan, now=0.0, exec_time=0.5, lead_time=0.0)
+    stats = pool.finalize(now=10.0)
+    assert stats.instance_seconds_gb > 0

@@ -1,0 +1,65 @@
+"""Sharding rule engine properties (hypothesis): every produced spec is
+valid for its shape (axes divide dims; no axis reused)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.sharding import spec_for_input, spec_for_param
+
+
+class FakeMesh:
+    def __init__(self, data=16, model=16, pod=None):
+        self.shape = {"data": data, "model": model}
+        self.axis_names = ("data", "model")
+        if pod:
+            self.shape = {"pod": pod, **self.shape}
+            self.axis_names = ("pod",) + self.axis_names
+
+
+dims = st.lists(st.sampled_from([1, 2, 3, 8, 16, 32, 128, 256, 4096,
+                                 5120, 14336, 151936]),
+                min_size=1, max_size=5).map(tuple)
+
+
+def _check(spec, shape, mesh):
+    used = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        assert shape[i] % size == 0, (spec, shape)
+        for a in axes:
+            assert a not in used
+            used.append(a)
+
+
+@given(dims)
+@settings(max_examples=80, deadline=None)
+def test_param_specs_valid_single_pod(shape):
+    mesh = FakeMesh()
+    _check(spec_for_param(shape, mesh), shape, mesh)
+    _check(spec_for_input(shape, mesh), shape, mesh)
+
+
+@given(dims)
+@settings(max_examples=80, deadline=None)
+def test_param_specs_valid_multi_pod(shape):
+    mesh = FakeMesh(pod=2)
+    _check(spec_for_param(shape, mesh), shape, mesh)
+    _check(spec_for_input(shape, mesh), shape, mesh)
+
+
+def test_big_matmul_weights_fully_sharded():
+    mesh = FakeMesh()
+    spec = spec_for_param((5120, 25600), mesh)
+    # both TP and FSDP assigned somewhere
+    flat = [e for e in spec if e is not None]
+    assert len(flat) == 2
+
+
+def test_stacked_layer_axis_never_sharded():
+    mesh = FakeMesh()
+    spec = spec_for_param((64, 5120, 25600), mesh, skip_axis0=True)
+    assert spec[0] is None

@@ -1,0 +1,63 @@
+"""Serving simulator: strategy ordering and the paper's headline claims
+(§6.2) hold qualitatively across seeds."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.simulator import PredictorErrorModel, ServingSimulator
+from repro.core.trace import TraceConfig
+
+
+@pytest.fixture(scope="module")
+def results():
+    sim = ServingSimulator(get_config("mixtral-8x7b"), num_devices=8,
+                           trace=TraceConfig(duration_s=40, base_rate=4))
+    return sim.run_all()
+
+
+def test_latency_ordering(results):
+    """oracle <= moeless <= eplb <= megatron (paper Figs. 8/9)."""
+    o, m, e, g = (results[k].mean_ms() for k in
+                  ("oracle", "moeless", "eplb", "megatron-lm"))
+    assert o <= m <= e <= g
+
+
+def test_moeless_latency_reduction_magnitude(results):
+    g = results["megatron-lm"].mean_ms()
+    m = results["moeless"].mean_ms()
+    red = (1 - m / g) * 100
+    assert 25 <= red <= 70, f"latency reduction {red:.1f}% out of band " \
+        "(paper: 43.19%)"
+
+
+def test_moeless_cost_reduction(results):
+    for base in ("megatron-lm", "eplb", "oracle"):
+        red = (1 - results["moeless"].total_cost
+               / results[base].total_cost) * 100
+        assert red >= 70, f"cost reduction vs {base}: {red:.1f}% " \
+            "(paper: 84-95%)"
+
+
+def test_replica_budget_respected(results):
+    e = get_config("mixtral-8x7b").moe.num_experts
+    assert results["moeless"].mean_replicas_per_layer <= 2 * e
+
+
+def test_error_model_accuracy_profile():
+    em = PredictorErrorModel()
+    # decreasing in distance, increasing in layer (paper Fig. 6b)
+    assert em.accuracy(10, 1) >= em.accuracy(10, 3) >= em.accuracy(10, 5)
+    assert em.accuracy(12, 2) >= em.accuracy(0, 2)
+
+
+def test_seed_robustness():
+    reds = []
+    for seed in (1, 2):
+        sim = ServingSimulator(get_config("phi-3.5-moe"), num_devices=8,
+                               trace=TraceConfig(duration_s=25,
+                                                 base_rate=3, seed=seed),
+                               seed=seed)
+        r = sim.run_all(("megatron-lm", "moeless"))
+        reds.append(1 - r["moeless"].mean_ms()
+                    / r["megatron-lm"].mean_ms())
+    assert all(r > 0.2 for r in reds), reds

@@ -1,0 +1,68 @@
+"""Training substrate: loss decreases on a small MoE; checkpoint
+round-trips exactly; gradient accumulation matches single-batch grads."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import InputShape, MoESpec
+from repro.models import model as M
+from repro.training.checkpoint import restore, save
+from repro.training.data import DataConfig, TokenStream
+from repro.training.optimizer import adamw
+from repro.training.train_loop import train
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_loss_decreases():
+    cfg = get_config("mixtral-8x7b", smoke=True).with_(
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=256, vocab_size=512,
+        moe=MoESpec(num_experts=4, top_k=2, d_ff=256))
+    res, _ = train(cfg, steps=30, seq_len=64, global_batch=4, lr=2e-3,
+                   verbose=False)
+    assert np.mean(res.losses[-5:]) < np.mean(res.losses[:5])
+
+
+def test_data_stream_deterministic_and_seekable():
+    dc = DataConfig(vocab_size=256, seq_len=32, global_batch=2, seed=1)
+    s1, s2 = TokenStream(dc), TokenStream(dc)
+    np.testing.assert_array_equal(s1.batch(7)["tokens"],
+                                  s2.batch(7)["tokens"])
+    assert not np.array_equal(s1.batch(7)["tokens"],
+                              s1.batch(8)["tokens"])
+    np.testing.assert_array_equal(s1.batch(3)["tokens"][:, 1:],
+                                  s1.batch(3)["labels"][:, :-1])
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("qwen3-32b", smoke=True)
+    params = M.init_params(cfg, KEY)
+    path = tmp_path / "ckpt"
+    save(path, params, step=5)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    back = restore(path, zeros)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grad_accumulation_equivalence():
+    cfg = get_config("qwen3-32b", smoke=True).with_(
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2,
+        head_dim=32, d_ff=128, vocab_size=128, dtype="float32")
+    params = M.init_params(cfg, KEY)
+    opt = adamw(1e-3)
+    st = opt.init(params)
+    batch = M.input_specs(cfg, InputShape("t", 16, 4, "train"),
+                          abstract=False, key=KEY)
+    s1 = M.make_train_step(cfg, opt, microbatches=1)
+    s2 = M.make_train_step(cfg, opt, microbatches=2)
+    p1, _, m1 = jax.jit(s1)(params, st, batch)
+    p2, _, m2 = jax.jit(s2)(params, st, batch)
+    # losses average to the same value; params close (grads averaged)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=5e-3)
