@@ -23,10 +23,12 @@ def main(argv=None) -> None:
     from benchmarks import (fig6_similarity, fig8_9_layer_latency,
                             fig10_cost, fig11_pred_accuracy,
                             fig12_correlation, fig13_16_sensitivity,
-                            fig17_ablation, kernel_bench,
+                            fig17_ablation, kernel_bench, serving_bench,
                             table2_footprints)
 
     suites = [
+        ("serving", lambda: serving_bench.main(
+            gen=8 if args.quick else 32)),
         ("fig6", lambda: fig6_similarity.main()),
         ("fig8_9", lambda: fig8_9_layer_latency.main(dur)),
         ("fig10", lambda: fig10_cost.main(dur)),

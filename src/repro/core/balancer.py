@@ -55,18 +55,22 @@ class EPLB:
         self.e, self.g = num_experts, num_devices
         self.budget = budget or 2 * num_experts
         self.period = period
-        self.hist: list[np.ndarray] = []
-        self.next_rebalance = 0.0
-        self._plan = {"default": static_plan(num_experts, num_devices)}
+        # per-LAYER histories and plans: averaging across layers would
+        # smear each layer's distinct skew into one flat histogram
+        self.hist: dict[int, list[np.ndarray]] = {}
+        self.next_rebalance: dict[int, float] = {}
+        self._plan: dict[int, LayerPlan] = {}
+        self._default = static_plan(num_experts, num_devices)
 
     def observe(self, t: float, layer: int, loads: np.ndarray) -> None:
-        self.hist.append(np.asarray(loads, np.float64))
-        if len(self.hist) > 4096:
-            del self.hist[:2048]
+        h = self.hist.setdefault(layer, [])
+        h.append(np.asarray(loads, np.float64))
+        if len(h) > 4096:
+            del h[:2048]
 
-    def _rebalance(self) -> None:
-        mean = (np.mean(self.hist, axis=0) if self.hist
-                else np.ones(self.e))
+    def _rebalance(self, layer: int) -> None:
+        h = self.hist.get(layer)
+        mean = np.mean(h, axis=0) if h else np.ones(self.e)
         mean = np.maximum(mean, 1e-9)
         quota = mean / mean.sum() * self.budget
         reps = np.maximum(1, np.floor(quota)).astype(np.int64)
@@ -75,14 +79,14 @@ class EPLB:
             order = np.argsort(-(quota - reps))
             for i in range(int(rem)):
                 reps[order[i % self.e]] += 1
-        self._plan["default"] = place_layer(mean, reps, self.g)
+        self._plan[layer] = place_layer(mean, reps, self.g)
 
     def plan(self, t: float, layer: int, predicted: np.ndarray,
              actual: np.ndarray) -> tuple[LayerPlan, float]:
-        if t >= self.next_rebalance:
-            self._rebalance()
-            self.next_rebalance = t + self.period
-        return self._plan["default"], 0.0
+        if t >= self.next_rebalance.get(layer, 0.0):
+            self._rebalance(layer)
+            self.next_rebalance[layer] = t + self.period
+        return self._plan.get(layer, self._default), 0.0
 
 
 class OracleBalancer:

@@ -94,3 +94,10 @@ def iteration_cost(forward_time: float, resident_bytes: float,
                    hw: Hardware = V5E) -> float:
     """C contribution of one (iteration, layer): time x GB in use."""
     return forward_time * (resident_bytes / 1e9) * hw.price_per_gb_s
+
+
+def misc_memory_bytes(cfg) -> float:
+    """M_misc — non-expert memory (attention + router + KV, rough per
+    model), billed identically for every strategy."""
+    d = cfg.d_model
+    return cfg.num_layers * 4 * d * d * 2 + cfg.vocab_size * d * 4

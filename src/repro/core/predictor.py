@@ -11,6 +11,7 @@ parameter count (Table 2: 1.9-4.2 MB total).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -86,6 +87,44 @@ class LoadPredictor:
         _, idx = jax.lax.top_k(logits, top_k)
         e = self.weights.shape[-1]
         return np.asarray(jnp.bincount(idx.reshape(-1), length=e))
+
+    def predict_loads_all(self, gate_inputs, actual_loads, top_k: int,
+                          token_mask=None) -> jnp.ndarray:
+        """Batched prediction for ALL MoE layers in one jitted call.
+
+        gate_inputs: (Lm, N, D) this iteration's gate inputs; layer l's
+        predictor (l >= d) reads gate_inputs[l-d]. actual_loads: (Lm, E);
+        layers l < d have no lookahead source and fall through to the
+        actual loads. `token_mask` (N,) excludes tokens (inactive
+        continuous-batching slots) from the predicted histograms.
+        Returns a (Lm, E) DEVICE array — the caller decides when the
+        single device->host transfer happens, so the per-layer Python
+        loop of the control plane never syncs.
+        """
+        return _predict_loads_batch(
+            self.weights, jnp.asarray(gate_inputs),
+            jnp.asarray(actual_loads),
+            None if token_mask is None else jnp.asarray(token_mask),
+            top_k=top_k, distance=self.distance)
+
+
+@partial(jax.jit, static_argnames=("top_k", "distance"))
+def _predict_loads_batch(weights, gate_inputs, actual_loads, token_mask, *,
+                         top_k: int, distance: int):
+    """weights (Lm, D, E); gate_inputs (Lm, N, D); actual_loads (Lm, E).
+    One einsum evaluates every layer's gate replica on its lookahead
+    source; layers below `distance` keep the actual loads."""
+    src = jnp.roll(gate_inputs, distance, axis=0)       # src[l] = gi[l - d]
+    logits = jnp.einsum("lnd,lde->lne", src.astype(weights.dtype), weights)
+    _, idx = jax.lax.top_k(logits, top_k)               # (Lm, N, k)
+    e = weights.shape[-1]
+    oh = jax.nn.one_hot(idx, e, dtype=jnp.float32)      # (Lm, N, k, E)
+    if token_mask is not None:
+        oh = oh * token_mask.astype(jnp.float32)[None, :, None, None]
+    pred = oh.sum(axis=(1, 2))
+    layer = jnp.arange(weights.shape[0])[:, None]
+    return jnp.where(layer >= distance, pred,
+                     actual_loads.astype(jnp.float32))
 
 
 def from_gates(cfg, params, distance: int) -> LoadPredictor:

@@ -61,6 +61,42 @@ class PredictorErrorModel:
         return acc * actual + (1 - acc) * mis
 
 
+def meter_layer(bal, t: float, layer: int, predicted: np.ndarray,
+                actual: np.ndarray, *, coeffs, num_devices: int,
+                prediction_distance: int = 1):
+    """Plan + meter ONE (iteration, layer) under a balancer — the single
+    source of the control-plane latency semantics, shared by the analytic
+    simulator and the real-model ``serving.engine.BalancerControlPlane``.
+    MoEless gets its prediction lead (forward time of `distance` earlier
+    layers); lossy strategies are timed at perfect balance. Returns
+    (t_fwd_seconds, plan)."""
+    if bal.name == "moeless":
+        lead = prediction_distance * (coeffs.t_misc + coeffs.alpha
+                                      * actual.sum() / num_devices)
+        plan, delay = bal.plan(t, layer, predicted, actual,
+                               lead_time=lead, exec_time=0.05)
+    else:
+        plan, delay = bal.plan(t, layer, predicted, actual)
+    bal.observe(t, layer, actual)
+    if getattr(bal, "lossy", False):
+        t_fwd = CM.oracle_forward_time(actual, num_devices, coeffs)
+    else:
+        t_fwd = CM.layer_forward_time(plan, actual, coeffs)
+    return t_fwd + delay, plan
+
+
+def layer_iteration_cost(bal, plan, t_fwd: float, *, coeffs,
+                         full_expert_bytes: float, m_misc: float) -> float:
+    """Billing for ONE (iteration, layer) — serverless strategies pay for
+    the replicas actually resident during the layer, serverful ones for
+    the full static deployment; misc memory is billed identically."""
+    layer_bytes = (plan.total_replicas * coeffs.expert_bytes
+                   if getattr(bal, "serverless", False)
+                   else full_expert_bytes)
+    return CM.iteration_cost(t_fwd, layer_bytes) \
+        + CM.iteration_cost(coeffs.t_misc, m_misc)
+
+
 @dataclass
 class SimResult:
     strategy: str
@@ -97,10 +133,7 @@ class ServingSimulator:
         self.num_moe_layers = self.cfg.num_layers \
             // self.cfg.moe.every_n_layers
         self.coeffs = CM.derive_coeffs(self.cfg)
-        # misc (non-expert) memory: attention + router + KV, rough per-model
-        d = self.cfg.d_model
-        self.m_misc = self.cfg.num_layers * 4 * d * d * 2 + \
-            self.cfg.vocab_size * d * 4
+        self.m_misc = CM.misc_memory_bytes(self.cfg)
 
     def _workload(self):
         reqs = generate_requests(self.trace)
@@ -134,32 +167,16 @@ class ServingSimulator:
                 predicted = self.error_model.predict(
                     rng, actual, l, self.prediction_distance) \
                     if strategy == "moeless" else actual
-                if strategy == "moeless":
-                    # lead time: forward time of `distance` earlier layers
-                    lead = self.prediction_distance * \
-                        (self.coeffs.t_misc + self.coeffs.alpha
-                         * actual.sum() / self.num_devices)
-                    plan, delay = bal.plan(it.t, l, predicted, actual,
-                                           lead_time=lead,
-                                           exec_time=0.05)
-                else:
-                    plan, delay = bal.plan(it.t, l, predicted, actual)
-                bal.observe(it.t, l, actual)
-                if getattr(bal, "lossy", False):
-                    t_fwd = CM.oracle_forward_time(actual, self.num_devices,
-                                                   self.coeffs)
-                else:
-                    t_fwd = CM.layer_forward_time(plan, actual, self.coeffs)
-                t_fwd += delay
+                t_fwd, plan = meter_layer(
+                    bal, it.t, l, predicted, actual, coeffs=self.coeffs,
+                    num_devices=self.num_devices,
+                    prediction_distance=self.prediction_distance)
                 lat.append(t_fwd)
                 rep_counts.append(plan.total_replicas)
-                if getattr(bal, "serverless", False):
-                    layer_bytes = plan.total_replicas \
-                        * self.coeffs.expert_bytes
-                    cost += CM.iteration_cost(t_fwd, layer_bytes)
-                else:
-                    cost += CM.iteration_cost(t_fwd, full_expert_bytes)
-                cost += CM.iteration_cost(self.coeffs.t_misc, self.m_misc)
+                cost += layer_iteration_cost(
+                    bal, plan, t_fwd, coeffs=self.coeffs,
+                    full_expert_bytes=full_expert_bytes,
+                    m_misc=self.m_misc)
         res = SimResult(
             strategy=strategy,
             layer_forward_ms=np.asarray(lat) * 1e3,

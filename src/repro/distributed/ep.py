@@ -22,6 +22,7 @@ layout, and gathered back.
 from __future__ import annotations
 
 import math
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +30,13 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.kernels import ref as KREF
+
+# jax promoted shard_map out of experimental at different versions; take
+# whichever this runtime provides
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:                                                  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 def ep_factorisation(num_experts: int, model_degree: int) -> tuple[int, int]:
@@ -47,6 +55,12 @@ def make_ep_mesh(num_experts: int, *, data: int = 16, model: int = 16):
 def plan_to_tables(plan, *, ep: int, slots_per_device: int):
     """LayerPlan -> routing tables (all shapes static).
 
+    A plan that asks for more replicas on a rank than `slots_per_device`
+    (reachable: the Scaler is not told the per-rank slot cap) degrades
+    gracefully — the overflowing replica SPILLS to the nearest rank with
+    free slots, with a warning. Only a plan whose total replica count
+    exceeds ep * slots_per_device is an error.
+
     Returns dict:
       expert_slots (E, R_max): global slot id of each replica (-1 pad)
       nrep         (E,)
@@ -54,19 +68,34 @@ def plan_to_tables(plan, *, ep: int, slots_per_device: int):
                    slot (E => empty). Rank of slot s = s // slots_per_device.
     """
     e_count = plan.num_experts
+    if plan.total_replicas > ep * slots_per_device:
+        raise ValueError(
+            f"plan places {plan.total_replicas} replicas but the slot "
+            f"tables hold only {ep} ranks x {slots_per_device} slots")
     r_max = int(plan.replicas.max())
     expert_slots = -np.ones((e_count, r_max), np.int32)
     slot_expert = np.full(ep * slots_per_device, e_count, np.int32)
     used = np.zeros(ep, np.int32)
+    spilled = 0
     for e in range(e_count):
         for r, g in enumerate(plan.placement[e]):
             g = g % ep
-            assert used[g] < slots_per_device, \
-                f"rank {g} out of slots (cap {slots_per_device})"
+            if used[g] >= slots_per_device:
+                # nearest rank (ring distance, either direction) with a
+                # free slot
+                g = min((int(gg) for gg in range(ep)
+                         if used[gg] < slots_per_device),
+                        key=lambda gg: min((gg - g) % ep, (g - gg) % ep))
+                spilled += 1
             s = g * slots_per_device + used[g]
             used[g] += 1
             expert_slots[e, r] = s
             slot_expert[s] = e
+    if spilled:
+        warnings.warn(
+            f"plan_to_tables: {spilled} replica(s) overflowed their rank "
+            f"(cap {slots_per_device}/rank) and spilled to neighbours",
+            RuntimeWarning, stacklevel=2)
     return {"expert_slots": jnp.asarray(expert_slots),
             "nrep": jnp.asarray(plan.replicas.astype(np.int32)),
             "slot_expert": jnp.asarray(slot_expert)}
@@ -185,7 +214,7 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
         loads = jax.lax.psum(loads, ("data", "ep"))
         return comb.reshape(b, s, d).astype(x_loc.dtype), loads
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local, mesh=mesh,
         in_specs=(P("data", "ep", None), P(),
                   P("ep", None, "tp"), P("ep", None, "tp"),

@@ -1,0 +1,10 @@
+"""Version shims for Pallas-TPU symbols the kernels use.
+
+Kept out of the package __init__ so consumers of the pure-jnp reference
+path (repro.kernels.ref) never import pallas-tpu at all.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
@@ -105,7 +107,7 @@ def decode_attention(q, k, v, kv_pos, kv_len, q_pos, *, window: int = 0,
                             pltpu.VMEM((1, hd), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(scalars, q, k, v, kv_pos)

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _gmm_kernel(gs_ref, x_ref, w_ref, o_ref, acc_ref, *, nd: int):
     """grid = (E, C//bc, F//bf, D//bd); D is innermost."""
@@ -81,7 +83,7 @@ def gmm(x, w, group_sizes, *, bc: int = 128, bf: int = 128, bd: int = 512,
             scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
@@ -147,7 +149,7 @@ def fused_gate_up(x, w_gate, w_up, group_sizes, *, bc: int = 128,
                             pltpu.VMEM((bc, bf), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

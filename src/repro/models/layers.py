@@ -202,11 +202,14 @@ def attention_block(p, cfg, x, positions, *, cache=None, cache_len=None,
     """Full attention sublayer: qkv proj -> rope -> attention -> out proj.
 
     Without a cache this is a training/prefill pass over x: (B, S, D).
-    With cache=(k, v) of shape (B, Smax, KV, hd) plus scalar cache_len it is
-    a decode step: x is (B, 1, D), the new k/v are written at
+    With cache=(k, v) of shape (B, Smax, KV, hd) plus cache_len it is a
+    decode step: x is (B, 1, D), the new k/v are written at
     `cache_len % Smax` (ring buffer — exact for full attention when
     Smax >= context, and the natural layout for sliding windows).
-    Returns (out, new_cache).
+    `cache_len` may be a scalar (uniform batch) or a (B,) vector of
+    per-row lengths — the continuous-batching slot pool, where every
+    sequence in the batch is at a different depth. Returns
+    (out, new_cache).
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -240,17 +243,28 @@ def attention_block(p, cfg, x, positions, *, cache=None, cache_len=None,
     else:
         ck, cv = cache["k"], cache["v"]
         smax = ck.shape[1]
-        slot = jnp.mod(cache_len, smax)
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                          (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                          (0, slot, 0, 0))
-        # absolute positions held in the ring: slot i holds position
-        # i + smax*floor((cache_len - i - 1)/smax + 1) ... simpler: track them
         kv_pos = cache["pos"]
-        kv_pos = jax.lax.dynamic_update_slice(kv_pos, pos1.astype(jnp.int32),
-                                              (0, slot))
-        n_valid = jnp.minimum(cache_len + s, smax)
+        cl = jnp.asarray(cache_len, jnp.int32)
+        if cl.ndim == 0:
+            slot = jnp.mod(cl, smax)
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, slot, 0, 0))
+            # absolute positions held in the ring: slot i holds position
+            # i + smax*floor((cache_len-i-1)/smax + 1) ... simpler: track them
+            kv_pos = jax.lax.dynamic_update_slice(
+                kv_pos, pos1.astype(jnp.int32), (0, slot))
+        else:
+            # per-row lengths: scatter each row's new entries at its own
+            # ring offset
+            rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+            idx = jnp.mod(cl[:, None] + jnp.arange(s, dtype=jnp.int32)[None],
+                          smax)                                    # (B, s)
+            ck = ck.at[rows, idx].set(k.astype(ck.dtype))
+            cv = cv.at[rows, idx].set(v.astype(cv.dtype))
+            kv_pos = kv_pos.at[rows, idx].set(pos1.astype(jnp.int32))
+        n_valid = jnp.minimum(cl + s, smax)
         out = attention(q, ck, cv, pos1, kv_pos, causal=True, window=window,
                         kv_len=n_valid)
         new_cache = {"k": ck, "v": cv, "pos": kv_pos}

@@ -44,9 +44,12 @@ def router_topk(logits, top_k: int):
     return top_w, top_i, probs
 
 
-def expert_loads(top_i, num_experts: int):
-    """Token count per expert — the paper's W_{l,e} (§3.3)."""
+def expert_loads(top_i, num_experts: int, token_mask=None):
+    """Token count per expert — the paper's W_{l,e} (§3.3). `token_mask`
+    (T,) excludes tokens (e.g. inactive continuous-batching slots)."""
     oh = jax.nn.one_hot(top_i, num_experts, dtype=jnp.int32)  # (T,k,E)
+    if token_mask is not None:
+        oh = oh * token_mask.reshape(-1, 1, 1).astype(jnp.int32)
     return oh.sum(axis=(0, 1))
 
 
@@ -70,14 +73,16 @@ def experts_ffn(p, x, act: str):
 
 def dispatch_moe(p, x, *, top_k: int, num_experts: int,
                  capacity_factor: float = 1.25, act: str = "swiglu",
-                 groups: int = 1):
+                 groups: int = 1, token_mask=None):
     """Grouped capacity dispatch (GShard).
 
     x: (B, S, D). Tokens are flattened and split into `groups` dispatch
     groups (set groups = number of data shards so each group's dispatch
     tensor stays local); capacity C = ceil(cf * k * Tg / E) per group.
-    Returns (y, metrics) where metrics carries the expert-load histogram
-    and aux loss.
+    `token_mask` (B, S) marks tokens whose routing should be EXCLUDED
+    from the expert-load metric (inactive continuous-batching slots) —
+    compute is unaffected. Returns (y, metrics) where metrics carries
+    the expert-load histogram and aux loss.
     """
     b, s, d = x.shape
     t = b * s
@@ -115,7 +120,9 @@ def dispatch_moe(p, x, *, top_k: int, num_experts: int,
     y = jnp.einsum("gtec,egcd->gtd", comb, expert_out)
 
     metrics = {
-        "expert_load": expert_loads(top_i.reshape(t, top_k), num_experts),
+        "expert_load": expert_loads(
+            top_i.reshape(t, top_k), num_experts,
+            None if token_mask is None else token_mask.reshape(t)),
         "aux_loss": load_balance_loss(probs, top_i.reshape(t, top_k),
                                       num_experts),
         "dropped": jnp.asarray(top_k * t, jnp.float32)

@@ -141,7 +141,7 @@ def init_params(cfg, key):
 
 def _apply_sublayer(cfg, sub: SubLayer, p, x, positions, *, cache=None,
                     cache_len=None, enc_out=None, window=0,
-                    collect: bool = False):
+                    collect: bool = False, token_mask=None):
     """One sublayer (mixer + optional cross-attn + ffn) with residuals.
     Returns (x, new_cache, metrics)."""
     new_cache = {}
@@ -202,7 +202,7 @@ def _apply_sublayer(cfg, sub: SubLayer, p, x, positions, *, cache=None,
                 p["moe"], h, top_k=cfg.moe.top_k,
                 num_experts=cfg.moe.num_experts,
                 capacity_factor=cfg.moe.capacity_factor, act=cfg.act,
-                groups=_moe_groups(cfg, h))
+                groups=_moe_groups(cfg, h), token_mask=token_mask)
             metrics["expert_load"] = m["expert_load"]
             metrics["aux_loss"] = m["aux_loss"]
             if collect:   # predictor fine-tuning dataset (paper §5)
@@ -375,19 +375,32 @@ def decode_step(cfg, params, batch, cache, cache_len, *, window: int = 0,
                 collect: bool = False):
     """One decode iteration: batch['tokens'] is (B, S_new) — S_new=1 for
     token-by-token decode, S_new=prompt_len for prefill-into-cache
-    (cache_len=0). Returns (logits (B,S_new,V), new_cache, metrics)."""
+    (cache_len=0). `cache_len` is a scalar, or a (B,) vector of per-row
+    cache depths for the continuous-batching slot pool (encoder-decoder
+    models require the scalar form). Returns (logits (B,S_new,V),
+    new_cache, metrics)."""
     pattern = layer_pattern(cfg)
     x = _embed(cfg, params, batch)
     bsz, s_new = batch["tokens"].shape
+    cache_len = jnp.asarray(cache_len, jnp.int32)
     pos = batch.get("positions")
     if pos is None:
-        pos = cache_len + jnp.broadcast_to(
+        base = cache_len if cache_len.ndim == 0 else cache_len[:, None]
+        pos = base + jnp.broadcast_to(
             jnp.arange(s_new, dtype=jnp.int32)[None], (bsz, s_new))
         if cfg.rope == "mrope":
             pos = jnp.repeat(pos[..., None], 3, axis=-1)
     enc_out = batch.get("enc_out")
     if cfg.encdec is not None:
         x = x + _sinusoidal_at(cache_len, cfg.d_model).astype(x.dtype)
+    # continuous batching: mask of tokens whose routing counts toward the
+    # control plane's expert-load metric — per-token (B, S_new) via
+    # batch['token_mask'] (padded prefill) or per-slot (B,) via
+    # batch['active'] (batched decode over the slot pool)
+    token_mask = batch.get("token_mask")
+    if token_mask is None and "active" in batch:
+        token_mask = jnp.broadcast_to(batch["active"][:, None],
+                                      (bsz, s_new))
 
     def body(h, xs):
         layer_params, layer_cache = xs
@@ -398,7 +411,8 @@ def decode_step(cfg, params, batch, cache, cache_len, *, window: int = 0,
                                        cache=layer_cache[j],
                                        cache_len=cache_len,
                                        enc_out=enc_out, window=window,
-                                       collect=collect)
+                                       collect=collect,
+                                       token_mask=token_mask)
             new_caches.append(nc)
             ms.append(m)
         y = {}

@@ -10,12 +10,26 @@ Per decode iteration (paper §3.2 workflow):
   step 4 — plans become EP slot tables (repro.distributed.ep) and each
            expert's load splits round-robin over its replicas.
 
-The compute path runs the capacity-dispatch model (single host) while the
-control plane is exercised end-to-end; `plan_tables` exposes the live
-slot tables that the shard_map EP layer consumes on a pod.
+The control plane is fully vectorised: load prediction for ALL MoE
+layers runs as one jitted call on this iteration's gate inputs, and the
+per-layer scale/place loop consumes a single device->host transfer per
+iteration (``host_transfers`` counts them) — no per-layer syncs inside
+the decode loop.
+
+Request serving (``ServingEngine.serve``) is continuous batching over a
+fixed slot pool (repro.serving.kv): requests from a trace are prefilled
+alone, spliced into a free KV slot, decoded together in ONE jitted step
+at static shapes with per-slot cache lengths, and leave on EOS / token
+budget, freeing the slot for the next arrival. Per-request TTFT / TPOT /
+E2E are recorded by the scheduler (repro.serving.scheduler).
+
+The compute path runs the capacity-dispatch model (single host) while
+the control plane is exercised end-to-end; `plan_tables` exposes the
+live slot tables that the shard_map EP layer consumes on a pod.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from functools import partial
 
@@ -23,14 +37,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import costmodel as CM
 from repro.core import predictor as PRED
+from repro.core.balancer import make_balancer
 from repro.core.costmodel import derive_coeffs
 from repro.core.placer import place_layer
 from repro.core.scaler import scale_layer
 from repro.core.serverless import ServerlessExpertPool
+from repro.core.simulator import layer_iteration_cost, meter_layer
 from repro.distributed.ep import ep_factorisation, plan_to_tables
-from repro.models import model as M
 from repro.models import transformer as T
+from repro.serving.kv import SlotKVCache
+from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                     RequestMetrics, percentile_summary)
+
+
+def _fetch_loads(predictor, cfg, gate_inputs, actual_loads, token_mask):
+    """(predicted, actual) per-layer loads on host in ONE device->host
+    transfer. With a predictor the batched gate-replica call runs on
+    device and both arrays come back in a single ``jax.device_get``;
+    without one the actual loads serve as the prediction."""
+    if predictor is not None and gate_inputs is not None:
+        dev = predictor.predict_loads_all(
+            gate_inputs, actual_loads, cfg.moe.top_k,
+            token_mask=token_mask)
+        pred, acts = jax.device_get((dev, actual_loads))
+    else:
+        acts = jax.device_get(actual_loads)
+        pred = acts
+    return (np.maximum(np.asarray(pred, np.float64), 0),
+            np.asarray(acts, np.float64))
 
 
 @dataclass
@@ -45,6 +81,8 @@ class MoElessController:
     prev_plans: dict = field(default_factory=dict)
     pools: dict = field(default_factory=dict)
     plans: list = field(default_factory=list)
+    host_transfers: int = 0          # device->host syncs (1 per iteration)
+    iterations: int = 0
 
     def __post_init__(self):
         e = self.cfg.moe.num_experts
@@ -58,31 +96,40 @@ class MoElessController:
                 expert_bytes=self.coeffs.expert_bytes)
         return self.pools[layer]
 
-    def plan_iteration(self, t: float, gate_inputs, actual_loads):
-        """gate_inputs: (Lm, N, D) this iteration's gate inputs;
-        actual_loads: (Lm, E). Returns list[LayerPlan] for the next
-        iteration (predicted loads d layers ahead per paper §4.1)."""
-        lm, e = actual_loads.shape
-        d = self.prediction_distance
+    def _predicted_loads(self, gate_inputs, actual_loads,
+                         token_mask=None) -> np.ndarray:
+        """(Lm, E) host loads for the next iteration in ONE device->host
+        transfer: the batched predictor evaluates every layer's gate
+        replica in a single jitted call (layers < d fall back to the
+        actual loads inside the same call)."""
+        pred, _ = _fetch_loads(self.predictor, self.cfg, gate_inputs,
+                               actual_loads, token_mask)
+        self.host_transfers += 1
+        return pred
+
+    def plan_iteration(self, t: float, gate_inputs, actual_loads,
+                       token_mask=None):
+        """gate_inputs: (Lm, N, D) this iteration's gate inputs (device
+        array — never synced per layer); actual_loads: (Lm, E). Returns
+        list[LayerPlan] for the next iteration (predicted loads d layers
+        ahead per paper §4.1)."""
+        lm = actual_loads.shape[0]
+        e = self.cfg.moe.num_experts
+        pred = self._predicted_loads(gate_inputs, actual_loads, token_mask)
         plans = []
         for l in range(lm):
-            if self.predictor is not None and l >= d:
-                pred = self.predictor.predict_loads(
-                    l, jnp.asarray(gate_inputs[l - d]), self.cfg.moe.top_k)
-            else:
-                pred = np.asarray(actual_loads[l])
-            pred = np.maximum(np.asarray(pred, np.float64), 0)
-            reps = scale_layer(pred, cv_threshold=self.cv_threshold,
+            reps = scale_layer(pred[l], cv_threshold=self.cv_threshold,
                                max_total_replicas=2 * e)
             pool = self.pool(l)
             plan = place_layer(
-                pred, reps, self.num_devices,
+                pred[l], reps, self.num_devices,
                 prev=self.prev_plans.get(l), alive=set(pool.instances),
                 max_replicas_per_device=self.slots_per_device)
             self.prev_plans[l] = plan
             pool.commit(plan, t, 0.05, 0.02)
             plans.append(plan)
         self.plans = plans
+        self.iterations += 1
         return plans
 
     def plan_tables(self, layer: int):
@@ -92,9 +139,103 @@ class MoElessController:
                               slots_per_device=self.slots_per_device)
 
 
+class BalancerControlPlane:
+    """Drive ANY `repro.core.balancer` strategy from the real model's
+    per-iteration routed loads, metering the paper's two objectives
+    (modeled per-layer MoE forward latency + pay-as-you-go cost) with the
+    same billing semantics as ``core.simulator`` — but with REAL loads
+    from the batched decode step instead of synthetic Zipf draws.
+
+    For MoEless the predicted loads come from the real ``LoadPredictor``
+    (one jitted batched call); other strategies see the actual loads.
+    Like the controller, this performs exactly one device->host transfer
+    per iteration.
+    """
+
+    def __init__(self, cfg, strategy: str, *, num_devices: int = 8,
+                 predictor: "PRED.LoadPredictor" = None,
+                 prediction_distance: int = 1, cv_threshold: float = 0.2,
+                 **bal_kw):
+        assert cfg.is_moe, "control plane serves MoE models"
+        self.cfg = cfg
+        self.strategy = strategy
+        self.num_devices = num_devices
+        self.predictor = predictor
+        self.prediction_distance = prediction_distance
+        self.n_layers = cfg.num_layers // cfg.moe.every_n_layers
+        self.coeffs = derive_coeffs(cfg)
+        self.bal = make_balancer(
+            strategy, num_experts=cfg.moe.num_experts,
+            num_devices=num_devices, expert_bytes=self.coeffs.expert_bytes,
+            num_layers=self.n_layers,
+            **({"cv_threshold": cv_threshold} if strategy == "moeless"
+               else {}), **bal_kw)
+        self.m_misc = CM.misc_memory_bytes(cfg)
+        self.full_expert_bytes = (self.n_layers * cfg.moe.num_experts
+                                  * self.coeffs.expert_bytes)
+        self.layer_latency: list[float] = []
+        self.iter_latency: list[float] = []
+        self.cost = 0.0
+        self.host_transfers = 0
+        if hasattr(self.bal, "prewarm"):
+            self.bal.prewarm(np.full(cfg.moe.num_experts, 1.0))
+
+    def on_iteration(self, t: float, gate_inputs, actual_loads,
+                     token_mask=None) -> float:
+        """One serving iteration: plan every MoE layer, meter latency and
+        cost (same semantics as ``core.simulator`` — shared helpers).
+        Returns the modeled iteration latency in seconds (the serving
+        clock advance)."""
+        pred, acts = _fetch_loads(self.predictor, self.cfg, gate_inputs,
+                                  actual_loads, token_mask)
+        self.host_transfers += 1
+        total = 0.0
+        for l in range(acts.shape[0]):
+            t_fwd, plan = meter_layer(
+                self.bal, t, l, pred[l], acts[l], coeffs=self.coeffs,
+                num_devices=self.num_devices,
+                prediction_distance=self.prediction_distance)
+            self.layer_latency.append(t_fwd)
+            total += t_fwd
+            self.cost += layer_iteration_cost(
+                self.bal, plan, t_fwd, coeffs=self.coeffs,
+                full_expert_bytes=self.full_expert_bytes,
+                m_misc=self.m_misc)
+        self.iter_latency.append(total)
+        return total
+
+    def mean_layer_ms(self) -> float:
+        return 1e3 * float(np.mean(self.layer_latency)) \
+            if self.layer_latency else 0.0
+
+    def p99_layer_ms(self) -> float:
+        return 1e3 * float(np.percentile(self.layer_latency, 99)) \
+            if self.layer_latency else 0.0
+
+
+@dataclass
+class ServeResult:
+    """Outcome of one continuous-batching trace replay."""
+    records: list[RequestMetrics]
+    iterations: int
+    prefills: int
+    rejected: int
+    mean_batch_occupancy: float
+    wall_s: float
+    control: BalancerControlPlane | None = None
+
+    def summary(self) -> dict:
+        return percentile_summary(self.records)
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(r.out_tokens for r in self.records)
+
+
 class ServingEngine:
-    """Prefill + token-by-token decode with KV caches; optionally drives a
-    MoElessController each iteration."""
+    """Prefill + decode with KV caches; optionally drives a
+    MoElessController each iteration. ``serve`` runs the full
+    continuous-batching loop over trace arrivals."""
 
     def __init__(self, cfg, params, *, max_len: int = 512,
                  controller: MoElessController | None = None,
@@ -103,14 +244,26 @@ class ServingEngine:
         self.max_len = max_len
         self.controller = controller
         self.window = window
-        collect = controller is not None and cfg.is_moe
-        self._step = jax.jit(partial(
-            T.decode_step, cfg, window=window, collect=collect),
-            static_argnames=())
+        self._steps: dict[bool, callable] = {}
+        self._collect = controller is not None and cfg.is_moe
+        self._step = self._get_step(self._collect)
+        # right-padded prefill is exact only when no sublayer carries
+        # recurrent state (pad tokens would advance SSM states)
+        self._pad_prefill = (cfg.encdec is None and all(
+            sub.mixer == "attn" for sub in T.layer_pattern(cfg)))
         self.iteration = 0
+
+    def _get_step(self, collect: bool):
+        if collect not in self._steps:
+            self._steps[collect] = jax.jit(partial(
+                T.decode_step, self.cfg, window=self.window,
+                collect=collect))
+        return self._steps[collect]
 
     def new_cache(self, batch_size: int):
         return T.init_cache(self.cfg, self.params, batch_size, self.max_len)
+
+    # ------------------------------------------------------ legacy batch API
 
     def prefill(self, batch):
         """batch['tokens']: (B, S_prompt). Returns (next_tokens, cache)."""
@@ -140,12 +293,142 @@ class ServingEngine:
             self.iteration += 1
         return jnp.stack(out, axis=1), cache, cache_len
 
-    def _drive_controller(self, metrics):
+    def _drive_controller(self, metrics, token_mask=None):
         if self.controller is None or "expert_load" not in metrics:
             return
-        gi = metrics.get("gate_input")
-        if gi is not None:
-            gi = np.asarray(gi.reshape(gi.shape[0], -1, gi.shape[-1]),
-                            np.float32)
         self.controller.plan_iteration(
-            float(self.iteration), gi, np.asarray(metrics["expert_load"]))
+            float(self.iteration), self._gate_inputs(metrics),
+            metrics["expert_load"], token_mask=token_mask)
+
+    # ------------------------------------------------- continuous batching
+
+    def prefill_request(self, prompt, collect: bool | None = None):
+        """Prefill ONE request (B=1) into a fresh cache. Attention-only
+        models are right-padded to a power-of-two bucket (bounds jit
+        recompilations; pad tokens sit after the prompt so causal
+        attention never sees them and the masked metrics ignore them);
+        recurrent models run at exact length. Returns
+        (first_token, cache, prompt_len, metrics, token_mask)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        plen = int(prompt.shape[0])
+        assert 0 < plen <= self.max_len
+        toks = prompt
+        if self._pad_prefill:
+            bucket = min(self.max_len, max(8, 1 << (plen - 1).bit_length()))
+            if bucket > plen:
+                toks = np.pad(prompt, (0, bucket - plen))
+        mask = (np.arange(toks.shape[0]) < plen)
+        cache = self.new_cache(1)
+        step = self._get_step(self._collect if collect is None else collect)
+        batch = {"tokens": jnp.asarray(toks[None]),
+                 "token_mask": jnp.asarray(mask[None])}
+        logits, cache, metrics = step(
+            self.params, batch, cache, jnp.asarray(0, jnp.int32))
+        first_tok = int(jnp.argmax(logits[0, plen - 1]))
+        return first_tok, cache, plen, metrics, jnp.asarray(mask)
+
+    def serve(self, requests, *, num_slots: int = 8, eos_id=None,
+              control: BalancerControlPlane | None = None,
+              time_scale: float = 1.0,
+              verbose: bool = False) -> ServeResult:
+        """Continuous-batching replay of `requests` (list[GenRequest]).
+
+        The serving clock starts at t=0 and advances by the modeled
+        iteration latency when a `control` plane is attached (so TTFT /
+        TPOT / E2E reflect the balancer under test), else by measured
+        wall time. Requests are admitted when the clock passes their
+        arrival and a KV slot is free. `time_scale` multiplies the clock
+        advance — smoke models' modeled service times are orders of
+        magnitude faster than real-trace arrival gaps, so scaling the
+        clock restores a production-like arrival/service ratio (and with
+        it, actual batch concurrency).
+        """
+        if self.cfg.encdec is not None:
+            raise NotImplementedError(
+                "continuous batching needs per-slot cache lengths, which "
+                "encoder-decoder decode does not support (scalar-only "
+                "positional offsets) — use the fixed-batch prefill/decode "
+                "API for enc-dec models")
+        # collect gate inputs for this serve only when some predictor
+        # consumes them (engine state is not mutated)
+        collect = self._collect or (
+            control is not None and control.predictor is not None
+            and self.cfg.is_moe)
+        step = self._get_step(collect)
+        kv = SlotKVCache(self.cfg, self.params, num_slots, self.max_len)
+        sched = ContinuousBatchingScheduler(kv, eos_id=eos_id)
+        for r in sorted(requests, key=lambda r: r.arrival):
+            sched.submit(r)
+        now = 0.0
+        cur = np.zeros(num_slots, np.int32)
+        occupancy = []
+        iters = prefills = 0
+        wall0 = time.perf_counter()
+        while not sched.done:
+            if not sched.running:
+                nxt = sched.next_arrival()
+                if nxt is not None:
+                    now = max(now, nxt)
+            # admission: prefill every arrived request that fits a slot
+            while (req := sched.pop_admissible(now)) is not None:
+                t0 = time.perf_counter()
+                tok, cache1, plen, metrics, mask = \
+                    self.prefill_request(req.prompt, collect=collect)
+                dt = None
+                if control is not None and "expert_load" in metrics:
+                    dt = control.on_iteration(
+                        now, self._gate_inputs(metrics),
+                        metrics["expert_load"], token_mask=mask)
+                self._drive_controller(metrics, token_mask=mask)
+                if dt is None:
+                    dt = time.perf_counter() - t0
+                slot = kv.alloc()
+                kv.insert(slot, cache1, plen)
+                sched.start(req, slot, now)
+                now += dt * time_scale
+                prefills += 1
+                cur[slot] = tok
+                sched.on_token(slot, tok, now)   # TTFT: end of prefill
+            if not sched.running:
+                continue
+            # one batched decode step over the whole pool (static shapes)
+            t0 = time.perf_counter()
+            lengths, active = kv.step_lengths()
+            batch = {"tokens": jnp.asarray(cur[:, None]), "active": active}
+            logits, kv.cache, metrics = step(
+                self.params, batch, kv.cache, lengths)
+            toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            dt = None
+            if control is not None and "expert_load" in metrics:
+                dt = control.on_iteration(
+                    now, self._gate_inputs(metrics),
+                    metrics["expert_load"], token_mask=active)
+            self._drive_controller(metrics, token_mask=active)
+            if dt is None:
+                dt = time.perf_counter() - t0
+            now += dt * time_scale
+            iters += 1
+            self.iteration += 1
+            occupancy.append(len(sched.running))
+            kv.advance()
+            for slot in list(sched.running):
+                cur[slot] = int(toks[slot])
+                sched.on_token(slot, int(toks[slot]), now)
+            if verbose and iters % 50 == 0:
+                print(f"  t={now:8.2f}s iter={iters} "
+                      f"active={len(sched.running)} "
+                      f"pending={len(sched.pending)} "
+                      f"done={len(sched.finished)}")
+        return ServeResult(
+            records=sched.metrics(), iterations=iters, prefills=prefills,
+            rejected=len(sched.rejected),
+            mean_batch_occupancy=float(np.mean(occupancy))
+            if occupancy else 0.0,
+            wall_s=time.perf_counter() - wall0, control=control)
+
+    @staticmethod
+    def _gate_inputs(metrics):
+        gi = metrics.get("gate_input")
+        if gi is None:
+            return None
+        return gi.reshape(gi.shape[0], -1, gi.shape[-1])

@@ -1,0 +1,100 @@
+"""Slot-based batched KV management for continuous batching.
+
+The serving engine decodes ONE jitted step over a fixed-size pool of
+`num_slots` sequence slots at static shapes. Each slot owns a row of
+every layer cache (attention ring buffers, SSM states); a free list
+recycles slots as requests finish, and per-slot length / active masks
+let sequences of different depths coexist in the same batched step
+(the per-row `cache_len` path of ``models.layers.attention_block``).
+
+A request is prefilled alone (B=1) into a private cache, then its cache
+row is spliced into the pool at its slot — joining the running batch
+mid-decode without touching the other slots.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+def _splice(pool_leaf, row_leaf, slot):
+    # pool leaf: (periods, num_slots, ...); row leaf: (periods, 1, ...)
+    return pool_leaf.at[:, slot].set(row_leaf[:, 0].astype(pool_leaf.dtype))
+
+
+_splice_tree = jax.jit(
+    lambda pool, row, slot: jax.tree.map(
+        lambda p, r: _splice(p, r, slot), pool, row))
+
+
+class SlotKVCache:
+    """Fixed pool of `num_slots` KV/state slots with a free list.
+
+    Attributes:
+      cache    — the batched cache pytree consumed by ``T.decode_step``
+                 (leaves stacked (periods, num_slots, ...)).
+      lengths  — host (num_slots,) int32 per-slot cache depths.
+      active   — host (num_slots,) bool; inactive slots still flow
+                 through the batched step but their outputs are ignored
+                 and their lengths frozen.
+    """
+
+    def __init__(self, cfg, params, num_slots: int, max_len: int):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.cache = T.init_cache(cfg, params, num_slots, max_len)
+        self.lengths = np.zeros(num_slots, np.int32)
+        self.active = np.zeros(num_slots, bool)
+        self._free = list(range(num_slots - 1, -1, -1))
+
+    # ------------------------------------------------------------ slots
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_active(self) -> int:
+        return int(self.active.sum())
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("KV slot pool exhausted")
+        return self._free.pop()
+
+    def free(self, slot: int) -> None:
+        if self.active[slot] or slot in self._free:
+            raise ValueError(f"freeing slot {slot} in invalid state")
+        self.lengths[slot] = 0
+        self._free.append(slot)
+
+    # ------------------------------------------------------------ data
+
+    def insert(self, slot: int, request_cache, length: int) -> None:
+        """Splice a single-request (B=1) prefilled cache into `slot`."""
+        assert 0 <= length <= self.max_len
+        self.cache = _splice_tree(self.cache, request_cache,
+                                  jnp.asarray(slot, jnp.int32))
+        self.lengths[slot] = length
+        self.active[slot] = True
+
+    def release(self, slot: int) -> int:
+        """Mark a finished request's slot inactive and recycle it."""
+        self.active[slot] = False
+        self.free(slot)
+        return slot
+
+    def step_lengths(self):
+        """(lengths, active) as device arrays for the batched decode step:
+        per-row cache_len plus the mask of rows whose outputs matter."""
+        return (jnp.asarray(self.lengths), jnp.asarray(self.active))
+
+    def advance(self) -> None:
+        """Account one decoded token for every active slot (the batched
+        step writes all rows, but only active rows' writes are meaningful
+        — inactive rows are re-spliced on their next insert)."""
+        self.lengths[self.active] += 1

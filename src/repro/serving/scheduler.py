@@ -1,0 +1,161 @@
+"""Continuous-batching request scheduler (paper §2.3 / §6.1).
+
+Requests arrive on a trace timeline, wait in an arrival-ordered queue,
+and are admitted into the running batch as KV slots free up: a request
+is prefilled alone, spliced into the slot pool, and from the next
+iteration decodes together with everything already in flight; it leaves
+the batch on EOS or its token budget and its slot is recycled
+immediately. Per-request TTFT / TPOT / E2E latencies are recorded
+against the serving clock the engine advances.
+
+The scheduler is pure bookkeeping — model execution lives in
+``repro.serving.engine``; slot memory in ``repro.serving.kv``.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class GenRequest:
+    """One generation request on the trace timeline."""
+    rid: int
+    arrival: float
+    prompt: np.ndarray                 # (prompt_len,) int token ids
+    max_new_tokens: int
+    # runtime state, filled by the scheduler
+    slot: int = -1
+    tokens: list = field(default_factory=list)      # generated ids
+    t_admitted: float = math.nan
+    t_first_token: float = math.nan
+    t_finish: float = math.nan
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.prompt).shape[0])
+
+
+@dataclass(frozen=True)
+class RequestMetrics:
+    """Per-request serving latencies (all in scheduler-clock seconds)."""
+    rid: int
+    arrival: float
+    in_tokens: int
+    out_tokens: int
+    ttft: float                        # first token - arrival (incl. queue)
+    tpot: float                        # mean time per subsequent token
+    e2e: float                         # finish - arrival
+
+    @classmethod
+    def of(cls, r: GenRequest) -> "RequestMetrics":
+        n = len(r.tokens)
+        tpot = ((r.t_finish - r.t_first_token) / (n - 1)) if n > 1 else 0.0
+        return cls(rid=r.rid, arrival=r.arrival, in_tokens=r.prompt_len,
+                   out_tokens=n, ttft=r.t_first_token - r.arrival,
+                   tpot=tpot, e2e=r.t_finish - r.arrival)
+
+
+def percentile_summary(records: list[RequestMetrics]) -> dict:
+    """{metric: {mean, p50, p95, p99}} over finished requests."""
+    out = {}
+    for m in ("ttft", "tpot", "e2e"):
+        xs = np.asarray([getattr(r, m) for r in records], np.float64)
+        if xs.size == 0:
+            out[m] = {"mean": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0}
+        else:
+            out[m] = {"mean": float(xs.mean()),
+                      "p50": float(np.percentile(xs, 50)),
+                      "p95": float(np.percentile(xs, 95)),
+                      "p99": float(np.percentile(xs, 99))}
+    return out
+
+
+class ContinuousBatchingScheduler:
+    """Arrival queue + admission control over a ``SlotKVCache``."""
+
+    def __init__(self, kv, *, eos_id: int | None = None):
+        self.kv = kv
+        self.eos_id = eos_id
+        self.pending: deque[GenRequest] = deque()
+        self.running: dict[int, GenRequest] = {}     # slot -> request
+        self.finished: list[GenRequest] = []
+        self.rejected: list[GenRequest] = []
+
+    # --------------------------------------------------------- admission
+
+    def submit(self, req: GenRequest) -> None:
+        """Admission control: a request must fit its prompt plus token
+        budget inside one slot's ring buffer (otherwise the early KV it
+        would still need gets overwritten)."""
+        if req.prompt_len + req.max_new_tokens > self.kv.max_len \
+                or req.prompt_len == 0 or req.max_new_tokens < 1:
+            self.rejected.append(req)
+            return
+        self.pending.append(req)
+
+    def next_arrival(self) -> float | None:
+        return self.pending[0].arrival if self.pending else None
+
+    def pop_admissible(self, now: float) -> GenRequest | None:
+        """Next request that has arrived by `now`, if a slot is free.
+        FCFS: a not-yet-arrived head does not unblock later arrivals."""
+        if (self.pending and self.kv.num_free > 0
+                and self.pending[0].arrival <= now):
+            return self.pending.popleft()
+        return None
+
+    def start(self, req: GenRequest, slot: int, now: float) -> None:
+        """Bind a freshly-prefilled request to its slot: it joins the
+        running batch at the next decode iteration."""
+        req.slot = slot
+        req.t_admitted = now
+        self.running[slot] = req
+
+    # --------------------------------------------------------- progress
+
+    def on_token(self, slot: int, token: int, now: float) -> bool:
+        """Record one generated token for the request in `slot`; returns
+        True (and recycles the slot) when the request finishes."""
+        req = self.running[slot]
+        if not req.tokens:
+            req.t_first_token = now
+        req.tokens.append(int(token))
+        done = (len(req.tokens) >= req.max_new_tokens
+                or (self.eos_id is not None and int(token) == self.eos_id))
+        if done:
+            req.t_finish = now
+            del self.running[slot]
+            self.kv.release(slot)
+            self.finished.append(req)
+        return done
+
+    @property
+    def done(self) -> bool:
+        return not self.pending and not self.running
+
+    def metrics(self) -> list[RequestMetrics]:
+        return [RequestMetrics.of(r) for r in self.finished]
+
+
+def requests_from_trace(trace_requests, vocab_size: int, *, max_len: int,
+                        seed: int = 0,
+                        max_new_cap: int = 0) -> list[GenRequest]:
+    """Materialise ``core.trace.Request`` arrivals (which only carry token
+    COUNTS) into concrete prompts for the real model, clipping each
+    request to fit a slot. `max_new_cap` > 0 additionally caps per-request
+    generation (keeps CPU replays bounded)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, r in enumerate(trace_requests):
+        in_t = int(min(r.in_tokens, max(1, max_len // 2)))
+        out_t = int(min(r.out_tokens, max_len - in_t))
+        if max_new_cap:
+            out_t = min(out_t, max_new_cap)
+        prompt = rng.integers(0, vocab_size, size=in_t, dtype=np.int32)
+        out.append(GenRequest(rid=i, arrival=float(r.arrival), prompt=prompt,
+                              max_new_tokens=max(1, out_t)))
+    return out

@@ -3,6 +3,8 @@ cache vs full attention, chunk invariance."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip property tests cleanly
 from hypothesis import given, settings, strategies as st
 
 from repro.models import layers as L

@@ -63,6 +63,9 @@ def test_ep_layer_matches_dense_reference():
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
         env={"PYTHONPATH": str(root / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root"}, timeout=500)
+             "HOME": "/root",
+             # without this the child probes for a TPU backend and burns
+             # minutes in GCP-metadata retries before falling back to CPU
+             "JAX_PLATFORMS": "cpu"}, timeout=500)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "OK" in r.stdout

@@ -1,5 +1,7 @@
 """Property-based tests (hypothesis) for the paper's Algorithms 1 & 2."""
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip property tests cleanly
 from hypothesis import given, settings, strategies as st
 
 from repro.core.placer import place_layer, placement_migrations

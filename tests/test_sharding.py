@@ -3,6 +3,7 @@ valid for its shape (axes divide dims; no axis reused)."""
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip property tests cleanly
 from hypothesis import given, settings, strategies as st
 
 from repro.distributed.sharding import spec_for_input, spec_for_param
