@@ -1,6 +1,11 @@
-"""Kernel microbenchmark: the grouped expert FFN (jnp reference executed
-on CPU — wall time here is NOT TPU perf; the roofline module carries the
-TPU projection). Reports us/call + analytic MXU utilisation targets."""
+"""Kernel microbenchmark: the grouped expert FFN through each backend of
+the `impl` knob (kernels.ops), so the perf trajectory records kernel-level
+numbers. `ref` (jnp) runs everywhere; `pallas` rows appear on TPU where
+the kernels actually lower (CPU wall time of the jnp path is NOT TPU
+perf; the roofline module carries the TPU projection). On CPU one tiny
+`pallas_interpret` row keeps the cross-backend comparison alive without
+minutes of interpreter wall time. Reports us/call + analytic MXU targets.
+"""
 from __future__ import annotations
 
 import time
@@ -13,7 +18,7 @@ from repro.kernels import ops
 PEAK_FLOPS = 197e12
 
 
-def bench(e, c, d, f, iters=5):
+def bench(e, c, d, f, impl: str = "ref", iters: int = 5):
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 4)
     x = jax.random.normal(ks[0], (e, c, d), jnp.float32)
@@ -21,11 +26,11 @@ def bench(e, c, d, f, iters=5):
     wu = jax.random.normal(ks[2], (e, d, f), jnp.float32) * 0.1
     wd = jax.random.normal(ks[3], (e, f, d), jnp.float32) * 0.1
     gs = jnp.full((e,), c, jnp.int32)
-    out = ops.expert_ffn(x, wg, wu, wd, gs, impl="ref")
+    out = ops.expert_ffn(x, wg, wu, wd, gs, impl=impl)
     out.block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
-        out = ops.expert_ffn(x, wg, wu, wd, gs, impl="ref")
+        out = ops.expert_ffn(x, wg, wu, wd, gs, impl=impl)
         out.block_until_ready()
     dt = (time.perf_counter() - t0) / iters
     flops = 6 * e * c * d * f
@@ -33,12 +38,23 @@ def bench(e, c, d, f, iters=5):
 
 
 def main():
+    impls = ["ref"]
+    if jax.default_backend() == "tpu":
+        impls.append("pallas")
     rows = []
     for e, c, d, f in [(8, 128, 512, 1792), (16, 256, 512, 800),
                        (8, 512, 1024, 3584)]:
-        us, tpu_us = bench(e, c, d, f)
-        rows.append((f"kernel/expert_ffn_e{e}c{c}d{d}f{f}", us,
-                     f"tpu_roofline={tpu_us:.1f}us"))
+        for impl in impls:
+            us, tpu_us = bench(e, c, d, f, impl=impl)
+            rows.append((f"kernel/expert_ffn_{impl}_e{e}c{c}d{d}f{f}", us,
+                         f"tpu_roofline={tpu_us:.1f}us"))
+    if "pallas" not in impls:
+        # interpret mode is a correctness vehicle, not a perf number —
+        # one tiny shape records that the Pallas path stays runnable
+        e, c, d, f = 2, 16, 32, 64
+        us, _ = bench(e, c, d, f, impl="pallas_interpret", iters=2)
+        rows.append((f"kernel/expert_ffn_pallas_interpret_"
+                     f"e{e}c{c}d{d}f{f}", us, "interpret_smoke"))
     return rows
 
 

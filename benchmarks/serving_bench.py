@@ -15,14 +15,14 @@ import numpy as np
 
 
 def main(slots: int = 8, gen: int = 32, prompt_len: int = 16,
-         arch: str = "mixtral-8x7b"):
+         arch: str = "mixtral-8x7b", impl: str = "auto"):
     from repro.configs import get_config
     from repro.core import predictor as P
     from repro.models import model as M
     from repro.serving.engine import MoElessController, ServingEngine
     from repro.serving.scheduler import GenRequest
 
-    cfg = get_config(arch, smoke=True).with_(dtype="float32")
+    cfg = get_config(arch, smoke=True).with_(dtype="float32", impl=impl)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     max_len = prompt_len + gen + 1
@@ -79,6 +79,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--gen", type=int, default=32)
+    from repro.kernels import IMPLS
+    ap.add_argument("--impl", default="auto", choices=IMPLS)
     a = ap.parse_args()
-    for name, us, derived in main(slots=a.slots, gen=a.gen):
+    for name, us, derived in main(slots=a.slots, gen=a.gen, impl=a.impl):
         print(f"{name},{us:.1f},{derived}")

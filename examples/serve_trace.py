@@ -23,6 +23,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.simulator import ServingSimulator
 from repro.core.trace import TraceConfig, generate_requests
+from repro.kernels import IMPLS
 
 STRATEGIES = ("megatron-lm", "eplb", "oracle", "moeless")
 
@@ -63,7 +64,8 @@ def run_real_model(args):
     from repro.serving.scheduler import requests_from_trace
 
     for ai, arch in enumerate(("mixtral-8x7b", "phi-3.5-moe")):
-        cfg = get_config(arch, smoke=True).with_(dtype="float32")
+        cfg = get_config(arch, smoke=True).with_(dtype="float32",
+                                                 impl=args.impl)
         # smoke configs of the two archs coincide by design (<=4 experts);
         # fold the arch index into the key so their weights differ
         params = M.init_params(cfg, jax.random.fold_in(
@@ -71,9 +73,9 @@ def run_real_model(args):
         predictor = P.from_gates(cfg, params, distance=args.distance)
         trace = generate_requests(TraceConfig(
             duration_s=args.duration, base_rate=args.rate, seed=args.seed))
-        print(f"\n=== {arch} [real model, continuous batching] "
-              f"({len(trace)} requests, {args.slots} KV slots, "
-              f"{args.devices} modeled devices) ===")
+        print(f"\n=== {arch} [real model, continuous batching, "
+              f"impl={args.impl}] ({len(trace)} requests, "
+              f"{args.slots} KV slots, {args.devices} modeled devices) ===")
         print(f"{'strategy':12s} {'reqs':>5s} {'iters':>6s} {'occ':>5s} "
               f"{'TTFT p50/p99 ms':>17s} {'TPOT p50/p99 ms':>17s} "
               f"{'E2E p50/p99 ms':>17s} {'layer ms':>9s} {'cost':>9s}")
@@ -119,6 +121,10 @@ def main():
                          "(real-model path)")
     ap.add_argument("--distance", type=int, default=1,
                     help="MoEless prediction distance d")
+    ap.add_argument("--impl", default="auto", choices=IMPLS,
+                    help="kernel backend for the real-model hot paths "
+                         "(expert FFN, decode attention); auto = pallas "
+                         "on TPU, jnp reference elsewhere")
     ap.add_argument("--time-scale", type=float, default=5000.0,
                     help="serving-clock multiplier for the real-model "
                          "path: smoke-model modeled latencies are ~1000x "

@@ -69,6 +69,10 @@ class ModelConfig:
     act: str = "swiglu"            # swiglu | gelu
     tie_embeddings: bool = False
     dtype: str = "bfloat16"
+    # kernel backend for the serving hot spots (expert FFN, decode
+    # attention): auto | pallas | pallas_interpret | ref — resolved by
+    # repro.kernels.ops (auto = pallas on TPU, ref elsewhere)
+    impl: str = "auto"
     source: str = ""               # citation bracket from the assignment
 
     @property

@@ -29,14 +29,25 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.kernels import ref as KREF
-
 # jax promoted shard_map out of experimental at different versions; take
 # whichever this runtime provides
 if hasattr(jax, "shard_map"):
     _shard_map = jax.shard_map
 else:                                                  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _shard_map_norep(f, *, mesh, in_specs, out_specs):
+    """shard_map with the replication checker off: pallas_call has no
+    replication rule, so the Pallas FFN backends cannot run under the
+    default checker. The flag was renamed check_rep -> check_vma across
+    jax releases; try both."""
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:                                  # pragma: no cover
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
 
 
 def ep_factorisation(num_experts: int, model_degree: int) -> tuple[int, int]:
@@ -133,12 +144,21 @@ def materialise_slots(expert_weights, slot_expert, mesh):
 def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
                  top_k: int, slots_per_device: int,
                  capacity_factor: float = 2.0, act: str = "swiglu",
-                 impl: str = "ref"):
+                 impl: str = "auto"):
     """x: (B, S, D) sharded P('data', 'ep', None) (replicated over 'tp').
     slot_w: dict of slot banks from materialise_slots.
+    `impl` selects the grouped-FFN kernel backend for the per-rank slot
+    compute (kernels.ops: auto | pallas | pallas_interpret | ref).
     Returns y sharded like x, plus per-expert load metrics."""
+    # lazy import: consumers of the slot-table helpers never pull in
+    # pallas-tpu (see kernels._compat)
+    from repro.kernels import ops as KOPS
     ep = mesh.shape["ep"]
     sd_ = slots_per_device
+    impl = KOPS.resolve_impl(impl)   # fail fast on unknown backends
+    # pallas_call has no replication rule, so the Pallas backends need
+    # the shard_map checker off; 'ref' keeps the default trace-time check
+    smap = _shard_map if impl == "ref" else _shard_map_norep
 
     def local(x_loc, rw, wg, wu, wd, expert_slots, nrep):
         b, s, d = x_loc.shape
@@ -195,7 +215,7 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
         buf = jnp.zeros((sd_, n, d), x_loc.dtype)
         buf = buf.at[jnp.clip(ls, 0, sd_ - 1), jnp.clip(p2, 0, n - 1)].set(
             jnp.where(valid[:, None], xs, 0.0))
-        out = KREF.expert_ffn_ref(buf, wg, wu, wd, gs)
+        out = KOPS.expert_ffn_impl(buf, wg, wu, wd, gs, impl)
         out = jax.lax.psum(out.astype(jnp.float32), "tp")  # f sharded on tp
         y = out[jnp.clip(ls, 0, sd_ - 1), jnp.clip(p2, 0, n - 1)]
         y = jnp.where(valid[:, None], y, 0.0)
@@ -214,7 +234,7 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
         loads = jax.lax.psum(loads, ("data", "ep"))
         return comb.reshape(b, s, d).astype(x_loc.dtype), loads
 
-    fn = _shard_map(
+    fn = smap(
         local, mesh=mesh,
         in_specs=(P("data", "ep", None), P(),
                   P("ep", None, "tp"), P("ep", None, "tp"),

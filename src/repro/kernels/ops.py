@@ -1,6 +1,21 @@
 """Jit'd public wrappers around the Pallas kernels with automatic backend
 selection: real TPU lowering on TPU, interpret-mode on CPU when
-explicitly requested, pure-jnp reference otherwise (fast CPU tests)."""
+explicitly requested, pure-jnp reference otherwise (fast CPU tests).
+
+This module is the single dispatch point for the `impl` knob that the
+config system (configs.base.ModelConfig.impl) threads through the model,
+the EP shard_map layer, and the serving engine:
+
+    auto             -> 'pallas' on TPU, 'ref' elsewhere
+    pallas           -> compiled Pallas TPU kernels
+    pallas_interpret -> Pallas kernels in interpret mode (CPU-debuggable)
+    ref              -> pure-jnp oracles (repro.kernels.ref)
+
+The ``*_impl`` functions are the un-jitted cores — safe to call inside
+an enclosing jit / shard_map (distributed.ep does). The public wrappers
+jit with ``impl`` static so each backend compiles into its own cache
+entry and an unknown impl fails at trace time, never silently.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -8,11 +23,52 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import moe_gmm, ref
+from repro.kernels import IMPLS, decode_attn, moe_gmm, ref
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_impl(impl: str = "auto") -> str:
+    """Validate and resolve the backend knob to a concrete backend."""
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+def expert_ffn_impl(x, w_gate, w_up, w_down, group_sizes, impl: str):
+    """Un-jitted core of ``expert_ffn`` (usable under shard_map)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.expert_ffn_ref(x, w_gate, w_up, w_down, group_sizes)
+    interp = impl == "pallas_interpret"
+    h = moe_gmm.fused_gate_up(x, w_gate, w_up, group_sizes,
+                              interpret=interp)
+    return moe_gmm.gmm(h, w_down, group_sizes, interpret=interp)
+
+
+def gmm_impl(x, w, group_sizes, impl: str):
+    """Un-jitted core of ``gmm`` (usable under shard_map)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.gmm_ref(x, w, group_sizes)
+    return moe_gmm.gmm(x, w, group_sizes,
+                       interpret=(impl == "pallas_interpret"))
+
+
+def decode_attention_impl(q, k, v, kv_pos, kv_len, q_pos, *, window: int,
+                          impl: str):
+    """Un-jitted core of ``decode_attention``."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return decode_attn.decode_attention_ref(q, k, v, kv_pos, kv_len,
+                                                q_pos, window=window)
+    return decode_attn.decode_attention(
+        q, k, v, kv_pos, kv_len, q_pos, window=window,
+        interpret=(impl == "pallas_interpret"))
 
 
 @partial(jax.jit, static_argnames=("impl",))
@@ -22,21 +78,22 @@ def expert_ffn(x, w_gate, w_up, w_down, group_sizes, *, impl: str = "auto"):
     impl: 'auto' (pallas on TPU else ref) | 'pallas' | 'pallas_interpret'
           | 'ref'
     """
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "ref"
-    if impl == "ref":
-        return ref.expert_ffn_ref(x, w_gate, w_up, w_down, group_sizes)
-    interp = impl == "pallas_interpret"
-    h = moe_gmm.fused_gate_up(x, w_gate, w_up, group_sizes,
-                              interpret=interp)
-    return moe_gmm.gmm(h, w_down, group_sizes, interpret=interp)
+    return expert_ffn_impl(x, w_gate, w_up, w_down, group_sizes, impl)
 
 
 @partial(jax.jit, static_argnames=("impl",))
 def gmm(x, w, group_sizes, *, impl: str = "auto"):
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "ref"
-    if impl == "ref":
-        return ref.gmm_ref(x, w, group_sizes)
-    return moe_gmm.gmm(x, w, group_sizes,
-                       interpret=(impl == "pallas_interpret"))
+    """Grouped matmul (E, C, D) x (E, D, F) -> (E, C, F)."""
+    return gmm_impl(x, w, group_sizes, impl)
+
+
+@partial(jax.jit, static_argnames=("window", "impl"))
+def decode_attention(q, k, v, kv_pos, kv_len, q_pos, *, window: int = 0,
+                     impl: str = "auto"):
+    """Single-token decode attention against a ring-buffered KV cache.
+
+    q: (B, H, hd); k/v: (B, S, KV, hd); kv_pos: (B, S); kv_len/q_pos:
+    (B,) or scalar. Returns (B, H, hd).
+    """
+    return decode_attention_impl(q, k, v, kv_pos, kv_len, q_pos,
+                                 window=window, impl=impl)

@@ -24,6 +24,9 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--no-moeless", action="store_true")
+    from repro.kernels import IMPLS
+    ap.add_argument("--impl", default="auto", choices=IMPLS,
+                    help="kernel backend (repro.kernels.ops)")
     args = ap.parse_args(argv)
 
     from repro.models import model as M
@@ -37,7 +40,7 @@ def main(argv=None):
         ctrl = MoElessController(cfg, num_devices=args.devices)
     engine = ServingEngine(cfg, params,
                            max_len=args.prompt_len + args.gen + 1,
-                           controller=ctrl)
+                           controller=ctrl, impl=args.impl)
     prompts = jax.random.randint(
         key, (args.requests, args.prompt_len), 0, cfg.vocab_size, jnp.int32)
     tok, cache, clen = engine.prefill({"tokens": prompts})

@@ -198,7 +198,7 @@ def init_attention(key, cfg, dtype):
 
 
 def attention_block(p, cfg, x, positions, *, cache=None, cache_len=None,
-                    window: int = 0):
+                    window: int = 0, impl: str = "ref"):
     """Full attention sublayer: qkv proj -> rope -> attention -> out proj.
 
     Without a cache this is a training/prefill pass over x: (B, S, D).
@@ -208,8 +208,13 @@ def attention_block(p, cfg, x, positions, *, cache=None, cache_len=None,
     Smax >= context, and the natural layout for sliding windows).
     `cache_len` may be a scalar (uniform batch) or a (B,) vector of
     per-row lengths — the continuous-batching slot pool, where every
-    sequence in the batch is at a different depth. Returns
-    (out, new_cache).
+    sequence in the batch is at a different depth.
+
+    `impl` selects the kernel backend for the single-new-token decode
+    hot spot (kernels.ops / kernels.decode_attn); 'ref'/'auto'-on-CPU
+    keep the chunked jnp path. Prefill and multi-token steps always use
+    the chunked path (the decode kernel is one-query-per-sequence).
+    Returns (out, new_cache).
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -265,8 +270,17 @@ def attention_block(p, cfg, x, positions, *, cache=None, cache_len=None,
             cv = cv.at[rows, idx].set(v.astype(cv.dtype))
             kv_pos = kv_pos.at[rows, idx].set(pos1.astype(jnp.int32))
         n_valid = jnp.minimum(cl + s, smax)
-        out = attention(q, ck, cv, pos1, kv_pos, causal=True, window=window,
-                        kv_len=n_valid)
+        # kernels.ops is imported lazily so consumers of the jnp-only
+        # paths never pull in pallas-tpu (see kernels._compat)
+        from repro.kernels import ops as KOPS
+        resolved = KOPS.resolve_impl(impl)
+        if resolved != "ref" and s == 1:
+            out = KOPS.decode_attention_impl(
+                q[:, 0], ck, cv, kv_pos, n_valid, pos1[:, 0],
+                window=window, impl=resolved)[:, None]
+        else:
+            out = attention(q, ck, cv, pos1, kv_pos, causal=True,
+                            window=window, kv_len=n_valid)
         new_cache = {"k": ck, "v": cv, "pos": kv_pos}
     out = out.reshape(b, s, h * hd) @ p["wo"]
     return out.astype(x.dtype), new_cache

@@ -61,19 +61,26 @@ def load_balance_loss(probs, top_i, num_experts: int):
     return num_experts * jnp.sum(f * p)
 
 
-def experts_ffn(p, x, act: str):
-    """x: (E, N, D) -> (E, N, D), vmapped per-expert FFN."""
+def experts_ffn(p, x, act: str, *, group_sizes=None, impl: str = "ref"):
+    """x: (E, N, D) -> (E, N, D), grouped per-expert FFN through the
+    kernels.ops backend selector. `group_sizes` (E,) marks rows beyond
+    it as padding (outputs zeroed; the Pallas backends also skip whole
+    row-tiles there). None => all rows active."""
+    # lazy import: consumers of the jnp-only model paths never pull in
+    # pallas-tpu (see kernels._compat)
+    from repro.kernels import ops as OPS
+    if group_sizes is None:
+        group_sizes = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
     if act == "swiglu":
-        h = jax.nn.silu(jnp.einsum("end,edf->enf", x, p["w_gate"])) \
-            * jnp.einsum("end,edf->enf", x, p["w_up"])
-    else:
-        h = jax.nn.gelu(jnp.einsum("end,edf->enf", x, p["w_up"]))
-    return jnp.einsum("enf,efd->end", h, p["w_down"])
+        return OPS.expert_ffn_impl(x, p["w_gate"], p["w_up"], p["w_down"],
+                                   group_sizes, impl)
+    h = jax.nn.gelu(OPS.gmm_impl(x, p["w_up"], group_sizes, impl))
+    return OPS.gmm_impl(h, p["w_down"], group_sizes, impl)
 
 
 def dispatch_moe(p, x, *, top_k: int, num_experts: int,
                  capacity_factor: float = 1.25, act: str = "swiglu",
-                 groups: int = 1, token_mask=None):
+                 groups: int = 1, token_mask=None, impl: str = "ref"):
     """Grouped capacity dispatch (GShard).
 
     x: (B, S, D). Tokens are flattened and split into `groups` dispatch
@@ -81,8 +88,10 @@ def dispatch_moe(p, x, *, top_k: int, num_experts: int,
     tensor stays local); capacity C = ceil(cf * k * Tg / E) per group.
     `token_mask` (B, S) marks tokens whose routing should be EXCLUDED
     from the expert-load metric (inactive continuous-batching slots) —
-    compute is unaffected. Returns (y, metrics) where metrics carries
-    the expert-load histogram and aux loss.
+    compute is unaffected. The expert FFN over the capacity layout runs
+    through the `impl` kernel backend (kernels.ops). Returns
+    (y, metrics) where metrics carries the expert-load histogram and
+    aux loss.
     """
     b, s, d = x.shape
     t = b * s
@@ -114,9 +123,19 @@ def dispatch_moe(p, x, *, top_k: int, num_experts: int,
     comb = (disp * top_w[..., None, None].astype(x.dtype)).sum(axis=2)
 
     expert_in = jnp.einsum("gtec,gtd->egcd", disp_te, xg)
+    # capacity-layout group sizes for the kernel: with one dispatch group
+    # the kept rows of every expert form a contiguous prefix (GShard
+    # cumsum positions), so the Pallas backends can skip/mask the tail;
+    # with several groups the prefixes interleave per group, so all rows
+    # stay active (unused rows are zero vectors -> FFN output is zero).
+    if groups == 1:
+        gs = keep.sum(axis=(1, 2))[0].astype(jnp.int32)          # (E,)
+    else:
+        gs = jnp.full((num_experts,), groups * cap, jnp.int32)
     expert_out = experts_ffn(p["experts"],
                              expert_in.reshape(num_experts, groups * cap, d),
-                             act).reshape(num_experts, groups, cap, d)
+                             act, group_sizes=gs,
+                             impl=impl).reshape(num_experts, groups, cap, d)
     y = jnp.einsum("gtec,egcd->gtd", comb, expert_out)
 
     metrics = {

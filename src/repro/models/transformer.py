@@ -151,7 +151,8 @@ def _apply_sublayer(cfg, sub: SubLayer, p, x, positions, *, cache=None,
         y, nc = L.attention_block(p["attn"], cfg, h, positions,
                                   cache=None if cache is None
                                   else cache["attn"],
-                                  cache_len=cache_len, window=window)
+                                  cache_len=cache_len, window=window,
+                                  impl=cfg.impl)
         if nc is not None:
             new_cache["attn"] = nc
     elif sub.mixer == "mamba":
@@ -202,7 +203,8 @@ def _apply_sublayer(cfg, sub: SubLayer, p, x, positions, *, cache=None,
                 p["moe"], h, top_k=cfg.moe.top_k,
                 num_experts=cfg.moe.num_experts,
                 capacity_factor=cfg.moe.capacity_factor, act=cfg.act,
-                groups=_moe_groups(cfg, h), token_mask=token_mask)
+                groups=_moe_groups(cfg, h), token_mask=token_mask,
+                impl=cfg.impl)
             metrics["expert_load"] = m["expert_load"]
             metrics["aux_loss"] = m["aux_loss"]
             if collect:   # predictor fine-tuning dataset (paper §5)

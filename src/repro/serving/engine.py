@@ -239,7 +239,11 @@ class ServingEngine:
 
     def __init__(self, cfg, params, *, max_len: int = 512,
                  controller: MoElessController | None = None,
-                 window: int = 0):
+                 window: int = 0, impl: str | None = None):
+        if impl is not None:   # override the config's kernel backend
+            from repro.kernels.ops import resolve_impl
+            resolve_impl(impl)   # validate eagerly, not at first step
+            cfg = cfg.with_(impl=impl)
         self.cfg, self.params = cfg, params
         self.max_len = max_len
         self.controller = controller

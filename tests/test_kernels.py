@@ -65,6 +65,41 @@ def test_group_size_zero_and_full():
         assert np.all(np.asarray(out)[mask] == 0)
 
 
+def test_non_mxu_aligned_shapes_interpret():
+    """fused_gate_up and gmm on shapes far off the 8x128 MXU lanes
+    (C=7, D=96, F=40) in interpret mode: allclose to the oracle and
+    masked rows exactly zero."""
+    e, c, d, f = 3, 7, 96, 40
+    x, wg, wu, wd = _mk(e, c, d, f, jnp.float32)
+    gs = jnp.asarray([7, 3, 0], jnp.int32)
+    mask = np.arange(c)[None] >= np.asarray(gs)[:, None]
+
+    h = moe_gmm.fused_gate_up(x, wg, wu, gs, interpret=True)
+    h_ref = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, wg)) \
+        * jnp.einsum("ecd,edf->ecf", x, wu)
+    h_ref = jnp.where(jnp.asarray(~mask)[..., None], h_ref, 0.0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=2e-4)
+    assert np.all(np.asarray(h)[mask] == 0)
+
+    y = moe_gmm.gmm(x, wg, gs, interpret=True)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.gmm_ref(x, wg, gs)),
+                               atol=1e-4)
+    assert np.all(np.asarray(y)[mask] == 0)
+
+
+def test_all_zero_group_sizes_interpret():
+    """group_sizes == 0 everywhere: every row is padding, outputs must
+    be exactly zero for both kernels (the @pl.when row-skip path)."""
+    e, c, d, f = 2, 16, 96, 40
+    x, wg, wu, _ = _mk(e, c, d, f, jnp.float32)
+    gs = jnp.zeros((e,), jnp.int32)
+    h = moe_gmm.fused_gate_up(x, wg, wu, gs, interpret=True)
+    y = moe_gmm.gmm(x, wg, gs, interpret=True)
+    assert np.all(np.asarray(h) == 0)
+    assert np.all(np.asarray(y) == 0)
+
+
 def test_block_shape_sweep():
     """Different BlockSpec tilings must agree (kernel is tiling-invariant)."""
     e, c, d, f = 2, 64, 128, 128

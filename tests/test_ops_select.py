@@ -1,0 +1,101 @@
+"""kernels.ops backend selection: auto-resolution, unknown-impl errors,
+and jit cache hygiene (the static `impl` argument must keep backends in
+separate compilation cache entries)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(5)
+
+
+def _mk(e=2, c=8, d=16, f=16):
+    ks = jax.random.split(KEY, 4)
+    return (jax.random.normal(ks[0], (e, c, d), jnp.float32),
+            jax.random.normal(ks[1], (e, d, f), jnp.float32) * 0.1,
+            jax.random.normal(ks[2], (e, d, f), jnp.float32) * 0.1,
+            jax.random.normal(ks[3], (e, f, d), jnp.float32) * 0.1,
+            jnp.asarray([c, c // 2], jnp.int32))
+
+
+def test_auto_resolves_to_ref_on_cpu():
+    assert jax.default_backend() == "cpu"   # conftest pins JAX_PLATFORMS
+    assert ops.resolve_impl("auto") == "ref"
+    for impl in ("pallas", "pallas_interpret", "ref"):
+        assert ops.resolve_impl(impl) == impl
+
+
+def test_unknown_impl_raises():
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.resolve_impl("cuda")
+    x, wg, wu, wd, gs = _mk()
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.expert_ffn(x, wg, wu, wd, gs, impl="triton")
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.gmm(x, wg, gs, impl="")
+
+
+def test_unknown_impl_raises_even_after_cached_calls():
+    """A successful compile for one backend must not let an unknown impl
+    slip through via a stale cache lookup."""
+    x, wg, wu, wd, gs = _mk()
+    ops.expert_ffn(x, wg, wu, wd, gs, impl="ref").block_until_ready()
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.expert_ffn(x, wg, wu, wd, gs, impl="refx")
+
+
+def test_jit_cache_keeps_backends_separate():
+    """Same shapes, different impl: each backend compiles its own cache
+    entry (static_argnames respected) and both keep matching the oracle
+    when called in alternation."""
+    # shapes unique to this test so earlier cache entries don't alias
+    x, wg, wu, wd, gs = _mk(e=3, c=8, d=16, f=16)
+    gs = jnp.asarray([8, 4, 2], jnp.int32)
+    expect = np.asarray(ref.expert_ffn_ref(x, wg, wu, wd, gs))
+
+    size0 = None
+    if hasattr(ops.expert_ffn, "_cache_size"):
+        size0 = ops.expert_ffn._cache_size()
+    out_ref = ops.expert_ffn(x, wg, wu, wd, gs, impl="ref")
+    out_pi = ops.expert_ffn(x, wg, wu, wd, gs, impl="pallas_interpret")
+    out_ref2 = ops.expert_ffn(x, wg, wu, wd, gs, impl="ref")
+    if size0 is not None:
+        assert ops.expert_ffn._cache_size() == size0 + 2
+
+    np.testing.assert_allclose(np.asarray(out_ref), expect, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out_pi), expect, atol=1e-4)
+    # the re-used 'ref' cache entry returns the ref result bit-for-bit
+    np.testing.assert_array_equal(np.asarray(out_ref),
+                                  np.asarray(out_ref2))
+
+
+def test_auto_equals_explicit_ref_on_cpu():
+    x, wg, wu, wd, gs = _mk()
+    a = ops.expert_ffn(x, wg, wu, wd, gs, impl="auto")
+    r = ops.expert_ffn(x, wg, wu, wd, gs, impl="ref")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+    ga = ops.gmm(x, wg, gs, impl="auto")
+    gr = ops.gmm(x, wg, gs, impl="ref")
+    np.testing.assert_array_equal(np.asarray(ga), np.asarray(gr))
+
+
+def test_decode_attention_wrapper_backends_agree():
+    """ops.decode_attention: ref and pallas_interpret agree (the wrapper
+    the model's decode hot path selects between)."""
+    b, h, kv, hd, s = 2, 4, 2, 32, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    kv_len = jnp.asarray([s, s - 5], jnp.int32)
+    q_pos = kv_len - 1
+    o_ref = ops.decode_attention(q, k, v, pos, kv_len, q_pos, impl="ref")
+    o_pi = ops.decode_attention(q, k, v, pos, kv_len, q_pos,
+                                impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pi),
+                               atol=2e-5)
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.decode_attention(q, k, v, pos, kv_len, q_pos, impl="flash")
