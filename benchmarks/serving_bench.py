@@ -1,7 +1,9 @@
 """Continuous-batching serving benchmark: decode throughput of the ONE
 jitted batched step over the slot pool vs one-request-at-a-time
-decoding, and the control-plane overhead per iteration (vectorized
-planning = 1 host sync).
+decoding, the per-slot sampling overhead (one extra jitted call), and
+the control-plane overhead per iteration — every control-plane row
+drives the single ``repro.core.control.ControlPlane.step``
+implementation (vectorized planning = 1 host sync).
 
   PYTHONPATH=src python -m benchmarks.serving_bench [--slots 8]
 """
@@ -20,19 +22,19 @@ def main(slots: int = 8, gen: int = 32, prompt_len: int = 16,
     from repro.core import predictor as P
     from repro.models import model as M
     from repro.serving.engine import MoElessController, ServingEngine
-    from repro.serving.scheduler import GenRequest
+    from repro.serving.scheduler import GenRequest, SamplingParams
 
     cfg = get_config(arch, smoke=True).with_(dtype="float32", impl=impl)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     max_len = prompt_len + gen + 1
 
-    def mk_reqs():
+    def mk_reqs(sampling: SamplingParams = SamplingParams()):
         return [GenRequest(
             rid=i, arrival=0.0,
             prompt=rng.integers(0, cfg.vocab_size, size=prompt_len,
                                 dtype=np.int32),
-            max_new_tokens=gen) for i in range(slots)]
+            max_new_tokens=gen, sampling=sampling) for i in range(slots)]
 
     # sequential: each request decoded alone (batch of 1)
     engine = ServingEngine(cfg, params, max_len=max_len)
@@ -49,7 +51,17 @@ def main(slots: int = 8, gen: int = 32, prompt_len: int = 16,
     res = engine.serve(mk_reqs(), num_slots=slots)
     bat_s = time.perf_counter() - t0
 
-    # batched + full MoEless control plane (vectorized planning)
+    # batched + per-slot top-k/top-p sampling (same jitted sampler call;
+    # greedy rows take the argmax lane)
+    samp = SamplingParams(temperature=0.8, top_k=max(2, cfg.vocab_size // 4),
+                          top_p=0.95, seed=0)
+    engine.serve(mk_reqs(samp)[:1], num_slots=slots)
+    t0 = time.perf_counter()
+    res_s = engine.serve(mk_reqs(samp), num_slots=slots)
+    smp_s = time.perf_counter() - t0
+
+    # batched + full MoEless control plane (vectorized planning through
+    # the one ControlPlane.step implementation)
     pred = P.from_gates(cfg, params, distance=1)
     ctrl = MoElessController(cfg, num_devices=8, predictor=pred)
     engine = ServingEngine(cfg, params, max_len=max_len, controller=ctrl)
@@ -69,6 +81,11 @@ def main(slots: int = 8, gen: int = 32, prompt_len: int = 16,
         ("serve_batched", bat_s / tokens * 1e6,
          f"{tokens / bat_s:.1f} tok/s "
          f"(occupancy {res.mean_batch_occupancy:.1f})"),
+        ("serve_batched+sampling", smp_s / tokens * 1e6,
+         f"{tokens / smp_s:.1f} tok/s "
+         f"(temp={samp.temperature}, top-k={samp.top_k}, "
+         f"top-p={samp.top_p}, occupancy "
+         f"{res_s.mean_batch_occupancy:.1f})"),
         ("serve_batched+control", ctl_s / tokens * 1e6,
          f"{tokens / ctl_s:.1f} tok/s "
          f"({syncs / max(iters, 1):.2f} host syncs/iter)"),

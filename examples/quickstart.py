@@ -2,13 +2,14 @@
 
 1. build a reduced MoE model and collect real gate data,
 2. fine-tune the layer-aware load predictors (paper §4.1),
-3. serve a batch: predictor -> scaler -> placer -> serverless slots,
+3. serve requests through the request-level API (submit / stream /
+   cancel, per-request SamplingParams): predictor -> scaler -> placer ->
+   serverless slots,
 4. report latency vs the Megatron static-EP baseline via the §3.3 model.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -17,6 +18,7 @@ from repro.core import costmodel as CM
 from repro.core.plan import static_plan
 from repro.models import model as M
 from repro.serving.engine import MoElessController, ServingEngine
+from repro.serving.scheduler import GenRequest, SamplingParams
 
 
 def main():
@@ -37,13 +39,25 @@ def main():
     print(f"predictor accuracy per layer: {acc0.round(3)} -> "
           f"{acc1.round(3)} (fine-tuned layers: {pred.finetuned_layers})")
 
-    # --- 3: serve with the control plane attached
+    # --- 3: serve through the request-level API, control plane attached
     ctrl = MoElessController(cfg, num_devices=8, predictor=pred)
     engine = ServingEngine(cfg, params, max_len=64, controller=ctrl)
-    prompts = jax.random.randint(key, (8, 16), 0, cfg.vocab_size, jnp.int32)
-    tok, cache, clen = engine.prefill({"tokens": prompts})
-    out, cache, clen = engine.decode(tok, cache, clen, 12)
-    print(f"generated {out.shape} tokens")
+    rng = np.random.default_rng(0)
+    engine.start(num_slots=4)
+    handles = [engine.submit(GenRequest(
+        rid=i, arrival=0.0,
+        prompt=rng.integers(0, cfg.vocab_size, size=16, dtype=np.int32),
+        max_new_tokens=12,
+        sampling=SamplingParams(temperature=0.8, top_k=16, seed=i)
+        if i % 2 else SamplingParams()))       # mix sampled + greedy
+        for i in range(8)]
+    streamed = list(engine.stream(handles[0]))   # incremental tokens
+    engine.cancel(handles[-1])                   # client gave up
+    res = engine.run()
+    print(f"served {len(res.records)} requests "
+          f"({res.cancelled} cancelled), streamed request 0 "
+          f"token-by-token: {streamed}")
+    assert streamed == handles[0].tokens
 
     # --- 4: latency vs static EP under the paper's §3.3 cost model
     from repro.core.placer import place_layer

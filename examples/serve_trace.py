@@ -60,9 +60,13 @@ def run_real_model(args):
 
     from repro.core import predictor as P
     from repro.models import model as M
-    from repro.serving.engine import BalancerControlPlane, ServingEngine
-    from repro.serving.scheduler import requests_from_trace
+    from repro.serving.engine import ControlPlane, ServingEngine
+    from repro.serving.scheduler import SamplingParams, requests_from_trace
 
+    # seed=None derives each request's RNG stream from its rid — still
+    # deterministic across runs, but requests never share a stream
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p)
     for ai, arch in enumerate(("mixtral-8x7b", "phi-3.5-moe")):
         cfg = get_config(arch, smoke=True).with_(dtype="float32",
                                                  impl=args.impl)
@@ -74,23 +78,26 @@ def run_real_model(args):
         trace = generate_requests(TraceConfig(
             duration_s=args.duration, base_rate=args.rate, seed=args.seed))
         print(f"\n=== {arch} [real model, continuous batching, "
-              f"impl={args.impl}] ({len(trace)} requests, "
+              f"impl={args.impl}, temperature={args.temperature}] "
+              f"({len(trace)} requests, "
               f"{args.slots} KV slots, {args.devices} modeled devices) ===")
         print(f"{'strategy':12s} {'reqs':>5s} {'iters':>6s} {'occ':>5s} "
               f"{'TTFT p50/p99 ms':>17s} {'TPOT p50/p99 ms':>17s} "
               f"{'E2E p50/p99 ms':>17s} {'layer ms':>9s} {'cost':>9s}")
+        clip = None
         for strategy in STRATEGIES:
             engine = ServingEngine(cfg, params, max_len=args.max_len)
-            control = BalancerControlPlane(
+            control = ControlPlane(
                 cfg, strategy, num_devices=args.devices,
                 predictor=predictor if strategy == "moeless" else None,
                 prediction_distance=args.distance)
             # identical trace replayed per strategy (fresh request
             # objects); only the control plane — and hence the modeled
             # serving clock — differs
-            reqs = requests_from_trace(
+            reqs, clip = requests_from_trace(
                 trace, cfg.vocab_size, max_len=args.max_len,
-                seed=args.seed, max_new_cap=args.max_new)
+                seed=args.seed, max_new_cap=args.max_new,
+                sampling=sampling)
             res = engine.serve(reqs, num_slots=args.slots, control=control,
                                time_scale=args.time_scale)
             s = res.summary()
@@ -102,6 +109,9 @@ def run_real_model(args):
                   f"{control.mean_layer_ms():9.4f} {control.cost:9.3g} "
                   f"[{res.wall_s:.1f}s wall, "
                   f"{control.host_transfers} host syncs]")
+        if clip is not None and clip.any:
+            print(f"note: trace clipped to fit max_len={args.max_len} "
+                  f"slots ({clip})")
 
 
 def main():
@@ -121,6 +131,13 @@ def main():
                          "(real-model path)")
     ap.add_argument("--distance", type=int, default=1,
                     help="MoEless prediction distance d")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature for the "
+                         "real-model replay (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k sampling filter (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1 = disabled)")
     ap.add_argument("--impl", default="auto", choices=IMPLS,
                     help="kernel backend for the real-model hot paths "
                          "(expert FFN, decode attention); auto = pallas "

@@ -28,7 +28,7 @@ class MegatronStatic:
     name = "megatron-lm"
     serverless = False
 
-    def __init__(self, num_experts: int, num_devices: int, **_):
+    def __init__(self, num_experts: int, num_devices: int):
         self._plan = static_plan(num_experts, num_devices)
 
     def plan(self, t: float, layer: int, predicted: np.ndarray,
@@ -51,7 +51,7 @@ class EPLB:
     serverless = False
 
     def __init__(self, num_experts: int, num_devices: int, *,
-                 budget: int = 0, period: float = 600.0, **_):
+                 budget: int = 0, period: float = 600.0):
         self.e, self.g = num_experts, num_devices
         self.budget = budget or 2 * num_experts
         self.period = period
@@ -98,7 +98,7 @@ class OracleBalancer:
     serverless = False
     lossy = True
 
-    def __init__(self, num_experts: int, num_devices: int, **_):
+    def __init__(self, num_experts: int, num_devices: int):
         self.e, self.g = num_experts, num_devices
 
     def observe(self, t, layer, loads):
@@ -127,6 +127,7 @@ class MoElessBalancer:
     num_layers: int = 32
     cv_threshold: float = 0.2
     mem_cap_slots: int = 0              # M_cap in slots (0 => 2E)
+    max_replicas_per_device: int = 0    # per-GPU slot cap M_g (0 => none)
     keep_alive: float = 60.0
     name: str = "moeless"
     serverless: bool = True
@@ -149,9 +150,10 @@ class MoElessBalancer:
                            max_total_replicas=self.mem_cap_slots
                            or 2 * self.num_experts)
         pool = self.pool(layer)
-        plan = place_layer(predicted, reps, self.num_devices,
-                           prev=self.prev.get(layer),
-                           alive=set(pool.instances))
+        plan = place_layer(
+            predicted, reps, self.num_devices, prev=self.prev.get(layer),
+            alive=set(pool.instances),
+            max_replicas_per_device=self.max_replicas_per_device)
         self.prev[layer] = plan
         ready = pool.commit(plan, t, exec_time, lead_time)
         # serve this iteration with the ready subset; still-cold replicas
@@ -181,16 +183,32 @@ class MoElessBalancer:
         return sum(p.resident_bytes(t) for p in self.pools.values())
 
 
+_STRATEGY_KWARGS = {
+    "megatron-lm": frozenset(),
+    "oracle": frozenset(),
+    "eplb": frozenset({"budget", "period"}),
+    "moeless": frozenset({"cv_threshold", "mem_cap_slots",
+                          "max_replicas_per_device", "keep_alive"}),
+}
+
+
 def make_balancer(kind: str, *, num_experts: int, num_devices: int,
                   expert_bytes: float = 0.0, num_layers: int = 32,
                   **kw):
+    if kind not in _STRATEGY_KWARGS:
+        raise KeyError(f"unknown balancing strategy {kind!r}; known: "
+                       f"{sorted(_STRATEGY_KWARGS)}")
+    unknown = set(kw) - _STRATEGY_KWARGS[kind]
+    if unknown:
+        raise TypeError(
+            f"strategy {kind!r} does not accept kwargs "
+            f"{sorted(unknown)}; allowed: "
+            f"{sorted(_STRATEGY_KWARGS[kind]) or 'none'}")
     if kind == "megatron-lm":
         return MegatronStatic(num_experts, num_devices)
     if kind == "eplb":
         return EPLB(num_experts, num_devices, **kw)
     if kind == "oracle":
         return OracleBalancer(num_experts, num_devices)
-    if kind == "moeless":
-        return MoElessBalancer(num_experts, num_devices, expert_bytes,
-                               num_layers=num_layers, **kw)
-    raise KeyError(kind)
+    return MoElessBalancer(num_experts, num_devices, expert_bytes,
+                           num_layers=num_layers, **kw)

@@ -1,0 +1,252 @@
+"""The ONE control-plane implementation (paper §3.2 workflow).
+
+Every consumer — the real-model ``ServingEngine``, the analytic
+``core.simulator``, and ``benchmarks/serving_bench.py`` — drives the
+same entry point:
+
+    ControlPlane.step(t, gate_inputs, actual_loads, token_mask)
+        -> IterationOutcome(latency_s, cost, plans)
+
+One ``step`` call plans EVERY MoE layer for one serving iteration under
+the configured balancing strategy, meters the paper's two objectives
+(modeled per-layer MoE forward latency + pay-as-you-go cost with the
+billing semantics of DESIGN.md §2), and returns the modeled iteration
+latency that advances the serving clock.
+
+Predicted loads come from one of three interchangeable sources:
+  * a real ``LoadPredictor`` (gate replicas, one jitted batched call,
+    ONE device->host transfer per iteration — ``host_transfers`` counts
+    them),
+  * an analytic ``PredictorErrorModel`` (simulator path: host arrays,
+    accuracy-calibrated corruption of the actual loads),
+  * the actual loads themselves (non-predictive strategies).
+
+``MoElessController`` is a thin adapter over the same class that only
+adds EP slot-table export (``plan_tables``) for the shard_map data
+plane — the scale/place/meter loop is NOT duplicated there.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import costmodel as CM
+from repro.core.balancer import make_balancer
+from repro.core.costmodel import derive_coeffs
+
+
+# ------------------------------------------------------------- metering
+
+
+def meter_layer(bal, t: float, layer: int, predicted: np.ndarray,
+                actual: np.ndarray, *, coeffs, num_devices: int,
+                prediction_distance: int = 1):
+    """Plan + meter ONE (iteration, layer) under a balancer — the single
+    source of the control-plane latency semantics. MoEless gets its
+    prediction lead (forward time of `distance` earlier layers); lossy
+    strategies are timed at perfect balance. Returns
+    (t_fwd_seconds, plan)."""
+    if bal.name == "moeless":
+        lead = prediction_distance * (coeffs.t_misc + coeffs.alpha
+                                      * actual.sum() / num_devices)
+        plan, delay = bal.plan(t, layer, predicted, actual,
+                               lead_time=lead, exec_time=0.05)
+    else:
+        plan, delay = bal.plan(t, layer, predicted, actual)
+    bal.observe(t, layer, actual)
+    if getattr(bal, "lossy", False):
+        t_fwd = CM.oracle_forward_time(actual, num_devices, coeffs)
+    else:
+        t_fwd = CM.layer_forward_time(plan, actual, coeffs)
+    return t_fwd + delay, plan
+
+
+def layer_iteration_cost(bal, plan, t_fwd: float, *, coeffs,
+                         full_expert_bytes: float, m_misc: float) -> float:
+    """Billing for ONE (iteration, layer) — serverless strategies pay for
+    the replicas actually resident during the layer, serverful ones for
+    the full static deployment; misc memory is billed identically."""
+    layer_bytes = (plan.total_replicas * coeffs.expert_bytes
+                   if getattr(bal, "serverless", False)
+                   else full_expert_bytes)
+    return CM.iteration_cost(t_fwd, layer_bytes) \
+        + CM.iteration_cost(coeffs.t_misc, m_misc)
+
+
+def _fetch_loads(predictor, top_k, gate_inputs, actual_loads, token_mask):
+    """(predicted, actual) per-layer loads on host in ONE device->host
+    transfer. With a predictor the batched gate-replica call runs on
+    device and both arrays come back in a single ``jax.device_get``;
+    without one the actual loads serve as the prediction."""
+    import jax
+
+    if predictor is not None and gate_inputs is not None:
+        dev = predictor.predict_loads_all(gate_inputs, actual_loads, top_k,
+                                          token_mask=token_mask)
+        pred, acts = jax.device_get((dev, actual_loads))
+    else:
+        acts = jax.device_get(actual_loads)
+        pred = acts
+    return (np.maximum(np.asarray(pred, np.float64), 0),
+            np.asarray(acts, np.float64))
+
+
+class IterationOutcome:
+    """What one control-plane iteration produced: the modeled iteration
+    latency (the serving-clock advance), the cost billed for this
+    iteration, and the per-MoE-layer plans that will serve the next
+    iteration."""
+
+    __slots__ = ("latency_s", "cost", "plans")
+
+    def __init__(self, latency_s: float, cost: float, plans: list):
+        self.latency_s = latency_s
+        self.cost = cost
+        self.plans = plans
+
+    def __repr__(self):
+        return (f"IterationOutcome(latency_s={self.latency_s:.6f}, "
+                f"cost={self.cost:.6g}, plans={len(self.plans)} layers)")
+
+
+class ControlPlane:
+    """THE control-plane protocol implementation: any
+    ``repro.core.balancer`` strategy driven from per-iteration expert
+    loads, real or synthetic.
+
+    step(t, gate_inputs, actual_loads, token_mask) -> IterationOutcome
+
+    gate_inputs: (Lm, N, D) device array of this iteration's gate inputs
+    (or None when no predictor consumes them); actual_loads: (Lm, E)
+    per-layer routed loads (device or host array); token_mask excludes
+    inactive continuous-batching slots from predicted histograms.
+    """
+
+    def __init__(self, cfg, strategy: str, *, num_devices: int = 8,
+                 predictor=None, error_model=None,
+                 prediction_distance: int = 1, cv_threshold: float = 0.2,
+                 seed: int = 0, prewarm: bool = True, **bal_kw):
+        assert cfg.is_moe, "control plane serves MoE models"
+        if predictor is not None and error_model is not None:
+            raise ValueError("pass a LoadPredictor or a PredictorErrorModel"
+                             ", not both")
+        self.cfg = cfg
+        self.strategy = strategy
+        self.num_devices = num_devices
+        self.predictor = predictor
+        self.error_model = error_model
+        self.prediction_distance = prediction_distance
+        self.n_layers = cfg.num_layers // cfg.moe.every_n_layers
+        self.coeffs = derive_coeffs(cfg)
+        self.bal = make_balancer(
+            strategy, num_experts=cfg.moe.num_experts,
+            num_devices=num_devices, expert_bytes=self.coeffs.expert_bytes,
+            num_layers=self.n_layers,
+            **({"cv_threshold": cv_threshold} if strategy == "moeless"
+               else {}), **bal_kw)
+        self.m_misc = CM.misc_memory_bytes(cfg)
+        self.full_expert_bytes = (self.n_layers * cfg.moe.num_experts
+                                  * self.coeffs.expert_bytes)
+        self._rng = np.random.default_rng(seed)
+        # meters
+        self.layer_latency: list[float] = []
+        self.iter_latency: list[float] = []
+        self.replica_counts: list[int] = []
+        self.cost = 0.0
+        self.host_transfers = 0    # device->host syncs (<=1 per iteration)
+        self.iterations = 0
+        self.last_plans: list = []
+        if prewarm and hasattr(self.bal, "prewarm"):
+            self.bal.prewarm(np.full(cfg.moe.num_experts, 1.0))
+
+    # ----------------------------------------------------------- loads
+
+    def _loads(self, gate_inputs, actual_loads, token_mask):
+        """(predicted, actual) as (Lm, E) float64 host arrays."""
+        if self.error_model is not None:
+            acts = np.asarray(actual_loads, np.float64)
+            pred = np.stack([
+                self.error_model.predict(self._rng, acts[l], l,
+                                         self.prediction_distance)
+                for l in range(acts.shape[0])])
+            return np.maximum(pred, 0), acts
+        pred, acts = _fetch_loads(self.predictor, self.cfg.moe.top_k,
+                                  gate_inputs, actual_loads, token_mask)
+        self.host_transfers += 1
+        return pred, acts
+
+    # ------------------------------------------------------------ step
+
+    def step(self, t: float, gate_inputs, actual_loads,
+             token_mask=None) -> IterationOutcome:
+        """One serving iteration: plan + meter every MoE layer. Returns
+        the iteration's outcome; cumulative meters stay on the instance
+        (``layer_latency``, ``iter_latency``, ``cost``,
+        ``host_transfers``)."""
+        pred, acts = self._loads(gate_inputs, actual_loads, token_mask)
+        total = 0.0
+        cost0 = self.cost
+        plans = []
+        for l in range(acts.shape[0]):
+            t_fwd, plan = meter_layer(
+                self.bal, t, l, pred[l], acts[l], coeffs=self.coeffs,
+                num_devices=self.num_devices,
+                prediction_distance=self.prediction_distance)
+            self.layer_latency.append(t_fwd)
+            self.replica_counts.append(plan.total_replicas)
+            total += t_fwd
+            self.cost += layer_iteration_cost(
+                self.bal, plan, t_fwd, coeffs=self.coeffs,
+                full_expert_bytes=self.full_expert_bytes,
+                m_misc=self.m_misc)
+            plans.append(plan)
+        self.iter_latency.append(total)
+        self.iterations += 1
+        self.last_plans = plans
+        return IterationOutcome(latency_s=total, cost=self.cost - cost0,
+                                plans=plans)
+
+    # --------------------------------------------------------- summary
+
+    def mean_layer_ms(self) -> float:
+        return 1e3 * float(np.mean(self.layer_latency)) \
+            if self.layer_latency else 0.0
+
+    def p99_layer_ms(self) -> float:
+        return 1e3 * float(np.percentile(self.layer_latency, 99)) \
+            if self.layer_latency else 0.0
+
+
+class MoElessController(ControlPlane):
+    """The paper's control plane bound to a real model: exactly
+    ``ControlPlane(strategy='moeless')`` plus EP slot-table export for
+    the shard_map data plane (``repro.distributed.ep``). The
+    scale/place/meter loop lives ONLY in ``ControlPlane.step``."""
+
+    def __init__(self, cfg, *, num_devices: int = 8,
+                 cv_threshold: float = 0.2, prediction_distance: int = 1,
+                 slots_per_device: int = 0, predictor=None):
+        e = cfg.moe.num_experts
+        self.slots_per_device = slots_per_device \
+            or max(2, (2 * e) // num_devices + 1)
+        super().__init__(
+            cfg, "moeless", num_devices=num_devices, predictor=predictor,
+            prediction_distance=prediction_distance,
+            cv_threshold=cv_threshold,
+            max_replicas_per_device=self.slots_per_device)
+
+    def pool(self, layer: int):
+        return self.bal.pool(layer)
+
+    @property
+    def plans(self) -> list:
+        """Per-layer FULL plans (all replicas, warm or cold) — what the
+        slot tables export; ``last_plans`` holds the effective (warm-
+        subset) plans the meter served with."""
+        return [self.bal.prev[l] for l in range(len(self.bal.prev))]
+
+    def plan_tables(self, layer: int):
+        """Slot tables for the shard_map EP layer (distributed/ep.py)."""
+        from repro.distributed.ep import ep_factorisation, plan_to_tables
+        ep, _ = ep_factorisation(self.cfg.moe.num_experts, self.num_devices)
+        return plan_to_tables(self.plans[layer], ep=ep,
+                              slots_per_device=self.slots_per_device)

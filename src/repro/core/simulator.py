@@ -18,7 +18,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import costmodel as CM
-from repro.core.balancer import make_balancer
+from repro.core.control import (ControlPlane,  # noqa: F401 (re-export)
+                                layer_iteration_cost, meter_layer)
 from repro.core.trace import (BatchIteration, ExpertLoadProcess, TraceConfig,
                               batch_iterations, generate_requests)
 
@@ -59,42 +60,6 @@ class PredictorErrorModel:
             return actual.astype(np.float64)
         mis = actual[rng.permutation(actual.size)].astype(np.float64)
         return acc * actual + (1 - acc) * mis
-
-
-def meter_layer(bal, t: float, layer: int, predicted: np.ndarray,
-                actual: np.ndarray, *, coeffs, num_devices: int,
-                prediction_distance: int = 1):
-    """Plan + meter ONE (iteration, layer) under a balancer — the single
-    source of the control-plane latency semantics, shared by the analytic
-    simulator and the real-model ``serving.engine.BalancerControlPlane``.
-    MoEless gets its prediction lead (forward time of `distance` earlier
-    layers); lossy strategies are timed at perfect balance. Returns
-    (t_fwd_seconds, plan)."""
-    if bal.name == "moeless":
-        lead = prediction_distance * (coeffs.t_misc + coeffs.alpha
-                                      * actual.sum() / num_devices)
-        plan, delay = bal.plan(t, layer, predicted, actual,
-                               lead_time=lead, exec_time=0.05)
-    else:
-        plan, delay = bal.plan(t, layer, predicted, actual)
-    bal.observe(t, layer, actual)
-    if getattr(bal, "lossy", False):
-        t_fwd = CM.oracle_forward_time(actual, num_devices, coeffs)
-    else:
-        t_fwd = CM.layer_forward_time(plan, actual, coeffs)
-    return t_fwd + delay, plan
-
-
-def layer_iteration_cost(bal, plan, t_fwd: float, *, coeffs,
-                         full_expert_bytes: float, m_misc: float) -> float:
-    """Billing for ONE (iteration, layer) — serverless strategies pay for
-    the replicas actually resident during the layer, serverful ones for
-    the full static deployment; misc memory is billed identically."""
-    layer_bytes = (plan.total_replicas * coeffs.expert_bytes
-                   if getattr(bal, "serverless", False)
-                   else full_expert_bytes)
-    return CM.iteration_cost(t_fwd, layer_bytes) \
-        + CM.iteration_cost(coeffs.t_misc, m_misc)
 
 
 @dataclass
@@ -144,46 +109,25 @@ class ServingSimulator:
         return iters, proc
 
     def run(self, strategy: str, **bal_kw) -> SimResult:
+        """Replay the synthetic trace through the ONE control-plane
+        implementation (``core.control.ControlPlane``) — identical
+        plan/meter/bill semantics to the real-model serving path, with
+        the analytic error model standing in for the JAX predictor."""
         iters, proc = self._workload()
-        bal = make_balancer(
-            strategy, num_experts=self.cfg.moe.num_experts,
-            num_devices=self.num_devices,
-            expert_bytes=self.coeffs.expert_bytes,
-            num_layers=self.num_moe_layers,
-            **({"cv_threshold": self.cv_threshold} if strategy == "moeless"
-               else {}), **bal_kw)
-        rng = np.random.default_rng(self.seed + 1)
-        if hasattr(bal, "prewarm"):
-            bal.prewarm(np.full(self.cfg.moe.num_experts, 1.0))
-        lat = []
-        cost = 0.0
-        rep_counts = []
-        full_expert_bytes = (self.num_moe_layers * self.cfg.moe.num_experts
-                             * self.coeffs.expert_bytes)
+        cp = ControlPlane(
+            self.cfg, strategy, num_devices=self.num_devices,
+            error_model=self.error_model if strategy == "moeless" else None,
+            prediction_distance=self.prediction_distance,
+            cv_threshold=self.cv_threshold, seed=self.seed + 1, **bal_kw)
         for it in iters:
-            loads_all = proc.loads(it.t, it.tokens)
-            for l in range(self.num_moe_layers):
-                actual = loads_all[l]
-                predicted = self.error_model.predict(
-                    rng, actual, l, self.prediction_distance) \
-                    if strategy == "moeless" else actual
-                t_fwd, plan = meter_layer(
-                    bal, it.t, l, predicted, actual, coeffs=self.coeffs,
-                    num_devices=self.num_devices,
-                    prediction_distance=self.prediction_distance)
-                lat.append(t_fwd)
-                rep_counts.append(plan.total_replicas)
-                cost += layer_iteration_cost(
-                    bal, plan, t_fwd, coeffs=self.coeffs,
-                    full_expert_bytes=full_expert_bytes,
-                    m_misc=self.m_misc)
+            cp.step(it.t, None, proc.loads(it.t, it.tokens))
         res = SimResult(
             strategy=strategy,
-            layer_forward_ms=np.asarray(lat) * 1e3,
-            total_cost=cost,
-            mean_replicas_per_layer=float(np.mean(rep_counts)))
-        if hasattr(bal, "pools"):
-            stats = [p.stats for p in bal.pools.values()]
+            layer_forward_ms=np.asarray(cp.layer_latency) * 1e3,
+            total_cost=cp.cost,
+            mean_replicas_per_layer=float(np.mean(cp.replica_counts)))
+        if hasattr(cp.bal, "pools"):
+            stats = [p.stats for p in cp.bal.pools.values()]
             res.cold_starts = sum(s.cold_starts for s in stats)
             res.prewarmed = sum(s.prewarmed for s in stats)
         return res

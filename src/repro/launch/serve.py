@@ -1,16 +1,15 @@
-"""Serving launcher: batched requests through the ServingEngine with the
-MoEless control plane attached (reduced model on CPU; the same engine
-drives the pod EP path).
+"""Serving launcher: requests through the ServingEngine's request-level
+API (submit / run / stream) with the MoEless control plane attached
+(reduced model on CPU; the same engine drives the pod EP path).
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
-      --requests 8 --prompt-len 32 --gen 16
+      --requests 8 --prompt-len 32 --gen 16 --temperature 0.8
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -23,6 +22,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=8,
+                    help="KV slot pool size (max concurrent requests)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-moeless", action="store_true")
     from repro.kernels import IMPLS
     ap.add_argument("--impl", default="auto", choices=IMPLS,
@@ -31,9 +37,10 @@ def main(argv=None):
 
     from repro.models import model as M
     from repro.serving.engine import MoElessController, ServingEngine
+    from repro.serving.scheduler import GenRequest, SamplingParams
 
     cfg = get_config(args.arch, smoke=True)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
     params = M.init_params(cfg, key)
     ctrl = None
     if cfg.is_moe and not args.no_moeless:
@@ -41,12 +48,24 @@ def main(argv=None):
     engine = ServingEngine(cfg, params,
                            max_len=args.prompt_len + args.gen + 1,
                            controller=ctrl, impl=args.impl)
-    prompts = jax.random.randint(
-        key, (args.requests, args.prompt_len), 0, cfg.vocab_size, jnp.int32)
-    tok, cache, clen = engine.prefill({"tokens": prompts})
-    out, cache, clen = engine.decode(tok, cache, clen, args.gen)
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p)
+    rng = np.random.default_rng(args.seed)
+    engine.start(num_slots=args.slots)
+    handles = [engine.submit(GenRequest(
+        rid=i, arrival=0.0,
+        prompt=rng.integers(0, cfg.vocab_size, size=args.prompt_len,
+                            dtype=np.int32),
+        max_new_tokens=args.gen, sampling=sampling))
+        for i in range(args.requests)]
+    res = engine.run()
+    s = res.summary()
     print(f"served {args.requests} requests x {args.gen} tokens "
-          f"with {cfg.name}")
+          f"with {cfg.name} (occupancy {res.mean_batch_occupancy:.1f}, "
+          f"temperature={args.temperature})")
+    print(f"  TTFT p50={s['ttft']['p50']*1e3:.2f} ms  "
+          f"TPOT p50={s['tpot']['p50']*1e3:.3f} ms  "
+          f"E2E p50={s['e2e']['p50']*1e3:.1f} ms")
     if ctrl is not None:
         reps = [p.total_replicas for p in ctrl.plans]
         stats = [ctrl.pool(l).stats for l in range(len(ctrl.plans))]
@@ -55,7 +74,8 @@ def main(argv=None):
         print(f"  warm starts={sum(s.warm_starts for s in stats)} "
               f"cold={sum(s.cold_starts for s in stats)} "
               f"prewarmed={sum(s.prewarmed for s in stats)}")
-    print("sample continuations:", np.asarray(out[:2]))
+    print("sample continuations:",
+          np.asarray([h.tokens[:8] for h in handles[:2]]))
 
 
 if __name__ == "__main__":

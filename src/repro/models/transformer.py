@@ -438,6 +438,48 @@ def decode_step(cfg, params, batch, cache, cache_len, *, window: int = 0,
     return _lm_head(cfg, params, x), new_cache, metrics
 
 
+# ---------------------------------------------------------------- sampling
+
+
+def _filter_top_k_top_p(lg, k, p):
+    """Mask one row of logits (V,) to its top-k entries (k<=0 => all) and
+    its top-p nucleus (smallest prefix of the descending-probability
+    ordering with cumulative mass >= p; the argmax always survives).
+    Both `k` and `p` are traced per-row scalars, so the filter works with
+    a DIFFERENT k/p on every slot of the batched step."""
+    order = jnp.argsort(-lg)                    # descending logits
+    ranks = jnp.argsort(order)                  # rank of each vocab id
+    keep_k = (k <= 0) | (ranks < k)
+    probs = jax.nn.softmax(lg[order])
+    cum = jnp.cumsum(probs) - probs             # exclusive prefix mass
+    keep_p = (cum < p)[ranks]                   # rank 0 always kept
+    return jnp.where(keep_k & keep_p, lg, -jnp.inf)
+
+
+@jax.jit
+def sample_tokens(logits, temperature, top_k, top_p, seed, step):
+    """Sample next tokens for EVERY slot in one jitted call.
+
+    logits (B, V); temperature/top_p (B,) float32; top_k (B,) int32;
+    seed (B,) int32 per-request RNG seeds; step (B,) int32 = how many
+    tokens each request has already sampled. Rows with temperature <= 0
+    take ``jnp.argmax`` — bit-identical to the pre-sampling greedy path.
+    Sampled rows draw from the temperature-scaled, top-k/top-p-filtered
+    distribution with key ``fold_in(PRNGKey(seed), step)``: keyed by the
+    request, not the slot or the batch, so a request's sample stream is
+    deterministic and independent of batch composition (batched decode
+    == sequential decode, the same identity the greedy path has)."""
+    greedy = jnp.argmax(logits, axis=-1)
+
+    def row(lg, t, k, p, s, n):
+        key = jax.random.fold_in(jax.random.PRNGKey(s), n)
+        lg = lg.astype(jnp.float32) / jnp.maximum(t, 1e-6)
+        return jax.random.categorical(key, _filter_top_k_top_p(lg, k, p))
+
+    sampled = jax.vmap(row)(logits, temperature, top_k, top_p, seed, step)
+    return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
+
+
 def _lm_head(cfg, params, x):
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
     logits = x @ head

@@ -1,228 +1,112 @@
-"""Serving engine: continuous-batch prefill/decode over the real JAX model
-with the MoEless control plane attached.
+"""Serving engine: a request-level API over continuous-batch
+prefill/decode on the real JAX model, with the MoEless control plane
+attached.
 
-Per decode iteration (paper §3.2 workflow):
-  step 1 — the Expert Load Predictor estimates the next iteration's
-           per-layer loads from this iteration's gate inputs,
-  step 2 — the Expert Scaler (Alg. 1) sizes replicas,
-  step 3 — the Expert Placer (Alg. 2) assigns them to EP ranks with
-           warm-start reuse via the serverless pool,
-  step 4 — plans become EP slot tables (repro.distributed.ep) and each
-           expert's load splits round-robin over its replicas.
+The serving surface (paper §3.2 workflow, grown to a client-facing API):
 
-The control plane is fully vectorised: load prediction for ALL MoE
-layers runs as one jitted call on this iteration's gate inputs, and the
-per-layer scale/place loop consumes a single device->host transfer per
-iteration (``host_transfers`` counts them) — no per-layer syncs inside
-the decode loop.
+    engine.start(num_slots=8, control=..., time_scale=...)
+    h = engine.submit(GenRequest(..., sampling=SamplingParams(...)))
+    engine.step()            # one admission+decode iteration
+    engine.run()             # drive until idle -> ServeResult
+    for tok in engine.stream(h): ...   # incremental tokens
+    engine.cancel(h)         # mid-decode: the KV slot is recycled
+                             # for the next pending arrival
+    engine.serve(requests)   # trace replay = thin driver over the above
 
-Request serving (``ServingEngine.serve``) is continuous batching over a
-fixed slot pool (repro.serving.kv): requests from a trace are prefilled
-alone, spliced into a free KV slot, decoded together in ONE jitted step
-at static shapes with per-slot cache lengths, and leave on EOS / token
-budget, freeing the slot for the next arrival. Per-request TTFT / TPOT /
-E2E are recorded by the scheduler (repro.serving.scheduler).
+Request serving is continuous batching over a fixed slot pool
+(repro.serving.kv): requests are prefilled alone, spliced into a free KV
+slot, decoded together in ONE jitted step at static shapes with per-slot
+cache lengths, and leave on EOS / stop sequence / token budget /
+cancellation, freeing the slot for the next arrival. Sampling is ONE
+jitted call over all slots with per-request RNG keys folded per
+generated token (``models.transformer.sample_tokens``) — greedy is the
+``temperature=0`` special case and is bit-identical to argmax decoding.
 
-The compute path runs the capacity-dispatch model (single host) while
-the control plane is exercised end-to-end; `plan_tables` exposes the
-live slot tables that the shard_map EP layer consumes on a pod.
+Every iteration drives the single control-plane implementation
+(``repro.core.control.ControlPlane.step``): the Expert Load Predictor
+estimates next-iteration per-layer loads from this iteration's gate
+inputs (one jitted call, ONE device->host sync), the Scaler (Alg. 1)
+sizes replicas, the Placer (Alg. 2) assigns them to EP ranks with
+warm-start reuse, and the modeled iteration latency advances the serving
+clock that TTFT / TPOT / E2E are recorded against.
 """
 from __future__ import annotations
 
+import math
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
+from typing import Iterator, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costmodel as CM
-from repro.core import predictor as PRED
-from repro.core.balancer import make_balancer
-from repro.core.costmodel import derive_coeffs
-from repro.core.placer import place_layer
-from repro.core.scaler import scale_layer
-from repro.core.serverless import ServerlessExpertPool
-from repro.core.simulator import layer_iteration_cost, meter_layer
-from repro.distributed.ep import ep_factorisation, plan_to_tables
+from repro.core.control import (ControlPlane,  # noqa: F401 (re-export)
+                                IterationOutcome, MoElessController)
 from repro.models import transformer as T
 from repro.serving.kv import SlotKVCache
-from repro.serving.scheduler import (ContinuousBatchingScheduler,
-                                     RequestMetrics, percentile_summary)
+from repro.serving.scheduler import (ContinuousBatchingScheduler, GenRequest,
+                                     RequestMetrics, SamplingParams,
+                                     percentile_summary)
 
 
-def _fetch_loads(predictor, cfg, gate_inputs, actual_loads, token_mask):
-    """(predicted, actual) per-layer loads on host in ONE device->host
-    transfer. With a predictor the batched gate-replica call runs on
-    device and both arrays come back in a single ``jax.device_get``;
-    without one the actual loads serve as the prediction."""
-    if predictor is not None and gate_inputs is not None:
-        dev = predictor.predict_loads_all(
-            gate_inputs, actual_loads, cfg.moe.top_k,
-            token_mask=token_mask)
-        pred, acts = jax.device_get((dev, actual_loads))
-    else:
-        acts = jax.device_get(actual_loads)
-        pred = acts
-    return (np.maximum(np.asarray(pred, np.float64), 0),
-            np.asarray(acts, np.float64))
+class TokenEvent(NamedTuple):
+    """One generated token, as surfaced by ``ServingEngine.step``."""
+    rid: int
+    token: int
+    done: bool
 
 
 @dataclass
-class MoElessController:
-    """The paper's control plane bound to a real model."""
-    cfg: "ModelConfig"
-    num_devices: int = 8
-    cv_threshold: float = 0.2
-    prediction_distance: int = 1
-    slots_per_device: int = 0
-    predictor: "PRED.LoadPredictor" = None
-    prev_plans: dict = field(default_factory=dict)
-    pools: dict = field(default_factory=dict)
-    plans: list = field(default_factory=list)
-    host_transfers: int = 0          # device->host syncs (1 per iteration)
-    iterations: int = 0
+class RequestHandle:
+    """Client-side view of one submitted request."""
+    req: GenRequest
+    _engine: "ServingEngine"
+    _rejected: bool = False
 
-    def __post_init__(self):
-        e = self.cfg.moe.num_experts
-        if not self.slots_per_device:
-            self.slots_per_device = max(2, (2 * e) // self.num_devices + 1)
-        self.coeffs = derive_coeffs(self.cfg)
+    @property
+    def rid(self) -> int:
+        return self.req.rid
 
-    def pool(self, layer: int) -> ServerlessExpertPool:
-        if layer not in self.pools:
-            self.pools[layer] = ServerlessExpertPool(
-                expert_bytes=self.coeffs.expert_bytes)
-        return self.pools[layer]
+    @property
+    def tokens(self) -> list[int]:
+        return self.req.tokens
 
-    def _predicted_loads(self, gate_inputs, actual_loads,
-                         token_mask=None) -> np.ndarray:
-        """(Lm, E) host loads for the next iteration in ONE device->host
-        transfer: the batched predictor evaluates every layer's gate
-        replica in a single jitted call (layers < d fall back to the
-        actual loads inside the same call)."""
-        pred, _ = _fetch_loads(self.predictor, self.cfg, gate_inputs,
-                               actual_loads, token_mask)
-        self.host_transfers += 1
-        return pred
+    @property
+    def status(self) -> str:
+        """queued | running | finished | cancelled | rejected"""
+        if self._rejected:
+            return "rejected"
+        if self.req.finish_reason == "cancelled":
+            return "cancelled"
+        if self.req.finish_reason:
+            return "finished"
+        sess = self._engine._session
+        if sess is not None and self.req.slot >= 0 \
+                and sess.sched.running.get(self.req.slot) is self.req:
+            return "running"
+        return "queued"
 
-    def plan_iteration(self, t: float, gate_inputs, actual_loads,
-                       token_mask=None):
-        """gate_inputs: (Lm, N, D) this iteration's gate inputs (device
-        array — never synced per layer); actual_loads: (Lm, E). Returns
-        list[LayerPlan] for the next iteration (predicted loads d layers
-        ahead per paper §4.1)."""
-        lm = actual_loads.shape[0]
-        e = self.cfg.moe.num_experts
-        pred = self._predicted_loads(gate_inputs, actual_loads, token_mask)
-        plans = []
-        for l in range(lm):
-            reps = scale_layer(pred[l], cv_threshold=self.cv_threshold,
-                               max_total_replicas=2 * e)
-            pool = self.pool(l)
-            plan = place_layer(
-                pred[l], reps, self.num_devices,
-                prev=self.prev_plans.get(l), alive=set(pool.instances),
-                max_replicas_per_device=self.slots_per_device)
-            self.prev_plans[l] = plan
-            pool.commit(plan, t, 0.05, 0.02)
-            plans.append(plan)
-        self.plans = plans
-        self.iterations += 1
-        return plans
+    @property
+    def finish_reason(self) -> str:
+        return self.req.finish_reason
 
-    def plan_tables(self, layer: int):
-        """Slot tables for the shard_map EP layer (distributed/ep.py)."""
-        ep, _ = ep_factorisation(self.cfg.moe.num_experts, self.num_devices)
-        return plan_to_tables(self.plans[layer], ep=ep,
-                              slots_per_device=self.slots_per_device)
-
-
-class BalancerControlPlane:
-    """Drive ANY `repro.core.balancer` strategy from the real model's
-    per-iteration routed loads, metering the paper's two objectives
-    (modeled per-layer MoE forward latency + pay-as-you-go cost) with the
-    same billing semantics as ``core.simulator`` — but with REAL loads
-    from the batched decode step instead of synthetic Zipf draws.
-
-    For MoEless the predicted loads come from the real ``LoadPredictor``
-    (one jitted batched call); other strategies see the actual loads.
-    Like the controller, this performs exactly one device->host transfer
-    per iteration.
-    """
-
-    def __init__(self, cfg, strategy: str, *, num_devices: int = 8,
-                 predictor: "PRED.LoadPredictor" = None,
-                 prediction_distance: int = 1, cv_threshold: float = 0.2,
-                 **bal_kw):
-        assert cfg.is_moe, "control plane serves MoE models"
-        self.cfg = cfg
-        self.strategy = strategy
-        self.num_devices = num_devices
-        self.predictor = predictor
-        self.prediction_distance = prediction_distance
-        self.n_layers = cfg.num_layers // cfg.moe.every_n_layers
-        self.coeffs = derive_coeffs(cfg)
-        self.bal = make_balancer(
-            strategy, num_experts=cfg.moe.num_experts,
-            num_devices=num_devices, expert_bytes=self.coeffs.expert_bytes,
-            num_layers=self.n_layers,
-            **({"cv_threshold": cv_threshold} if strategy == "moeless"
-               else {}), **bal_kw)
-        self.m_misc = CM.misc_memory_bytes(cfg)
-        self.full_expert_bytes = (self.n_layers * cfg.moe.num_experts
-                                  * self.coeffs.expert_bytes)
-        self.layer_latency: list[float] = []
-        self.iter_latency: list[float] = []
-        self.cost = 0.0
-        self.host_transfers = 0
-        if hasattr(self.bal, "prewarm"):
-            self.bal.prewarm(np.full(cfg.moe.num_experts, 1.0))
-
-    def on_iteration(self, t: float, gate_inputs, actual_loads,
-                     token_mask=None) -> float:
-        """One serving iteration: plan every MoE layer, meter latency and
-        cost (same semantics as ``core.simulator`` — shared helpers).
-        Returns the modeled iteration latency in seconds (the serving
-        clock advance)."""
-        pred, acts = _fetch_loads(self.predictor, self.cfg, gate_inputs,
-                                  actual_loads, token_mask)
-        self.host_transfers += 1
-        total = 0.0
-        for l in range(acts.shape[0]):
-            t_fwd, plan = meter_layer(
-                self.bal, t, l, pred[l], acts[l], coeffs=self.coeffs,
-                num_devices=self.num_devices,
-                prediction_distance=self.prediction_distance)
-            self.layer_latency.append(t_fwd)
-            total += t_fwd
-            self.cost += layer_iteration_cost(
-                self.bal, plan, t_fwd, coeffs=self.coeffs,
-                full_expert_bytes=self.full_expert_bytes,
-                m_misc=self.m_misc)
-        self.iter_latency.append(total)
-        return total
-
-    def mean_layer_ms(self) -> float:
-        return 1e3 * float(np.mean(self.layer_latency)) \
-            if self.layer_latency else 0.0
-
-    def p99_layer_ms(self) -> float:
-        return 1e3 * float(np.percentile(self.layer_latency, 99)) \
-            if self.layer_latency else 0.0
+    def metrics(self) -> RequestMetrics:
+        return RequestMetrics.of(self.req)
 
 
 @dataclass
 class ServeResult:
-    """Outcome of one continuous-batching trace replay."""
+    """Outcome of one continuous-batching serving session."""
     records: list[RequestMetrics]
     iterations: int
     prefills: int
     rejected: int
+    cancelled: int
     mean_batch_occupancy: float
     wall_s: float
-    control: BalancerControlPlane | None = None
+    control: ControlPlane | None = None
 
     def summary(self) -> dict:
         return percentile_summary(self.records)
@@ -232,13 +116,44 @@ class ServeResult:
         return sum(r.out_tokens for r in self.records)
 
 
+class _Session:
+    """Mutable state of one serving session: the slot pool, the
+    scheduler, the serving clock, and the per-slot sampling arrays that
+    feed the one jitted ``sample_tokens`` call."""
+
+    def __init__(self, cfg, params, num_slots: int, max_len: int,
+                 eos_id, control, time_scale: float):
+        self.kv = SlotKVCache(cfg, params, num_slots, max_len)
+        self.sched = ContinuousBatchingScheduler(self.kv, eos_id=eos_id)
+        self.control = control
+        self.time_scale = time_scale
+        self.now = 0.0
+        self.cur = np.zeros(num_slots, np.int32)       # last token per slot
+        self.temp = np.zeros(num_slots, np.float32)
+        self.topk = np.zeros(num_slots, np.int32)
+        self.topp = np.ones(num_slots, np.float32)
+        self.seed = np.zeros(num_slots, np.int32)
+        self.count = np.zeros(num_slots, np.int32)     # tokens sampled
+        self.occupancy: list[int] = []
+        self.iters = 0
+        self.prefills = 0
+        self.wall0 = time.perf_counter()
+
+    def bind_slot(self, slot: int, req: GenRequest) -> None:
+        s = req.sampling
+        self.temp[slot] = s.temperature
+        self.topk[slot] = s.top_k
+        self.topp[slot] = s.top_p
+        self.seed[slot] = s.effective_seed(req.rid)
+        self.count[slot] = 0
+
+
 class ServingEngine:
-    """Prefill + decode with KV caches; optionally drives a
-    MoElessController each iteration. ``serve`` runs the full
-    continuous-batching loop over trace arrivals."""
+    """Prefill + decode with KV caches behind a request-level API;
+    optionally drives a MoEless controller each iteration."""
 
     def __init__(self, cfg, params, *, max_len: int = 512,
-                 controller: MoElessController | None = None,
+                 controller: ControlPlane | None = None,
                  window: int = 0, impl: str | None = None):
         if impl is not None:   # override the config's kernel backend
             from repro.kernels.ops import resolve_impl
@@ -256,6 +171,7 @@ class ServingEngine:
         self._pad_prefill = (cfg.encdec is None and all(
             sub.mixer == "attn" for sub in T.layer_pattern(cfg)))
         self.iteration = 0
+        self._session: _Session | None = None
 
     def _get_step(self, collect: bool):
         if collect not in self._steps:
@@ -300,19 +216,22 @@ class ServingEngine:
     def _drive_controller(self, metrics, token_mask=None):
         if self.controller is None or "expert_load" not in metrics:
             return
-        self.controller.plan_iteration(
+        self.controller.step(
             float(self.iteration), self._gate_inputs(metrics),
             metrics["expert_load"], token_mask=token_mask)
 
-    # ------------------------------------------------- continuous batching
+    # ------------------------------------------------------------ prefill
 
-    def prefill_request(self, prompt, collect: bool | None = None):
+    def prefill_request(self, prompt, collect: bool | None = None,
+                        sampling: SamplingParams | None = None,
+                        rid: int = 0):
         """Prefill ONE request (B=1) into a fresh cache. Attention-only
         models are right-padded to a power-of-two bucket (bounds jit
         recompilations; pad tokens sit after the prompt so causal
         attention never sees them and the masked metrics ignore them);
-        recurrent models run at exact length. Returns
-        (first_token, cache, prompt_len, metrics, token_mask)."""
+        recurrent models run at exact length. The first output token is
+        sampled under `sampling` (argmax when None / temperature<=0).
+        Returns (first_token, cache, prompt_len, metrics, token_mask)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         plen = int(prompt.shape[0])
         assert 0 < plen <= self.max_len
@@ -328,107 +247,211 @@ class ServingEngine:
                  "token_mask": jnp.asarray(mask[None])}
         logits, cache, metrics = step(
             self.params, batch, cache, jnp.asarray(0, jnp.int32))
-        first_tok = int(jnp.argmax(logits[0, plen - 1]))
+        s = sampling or SamplingParams()
+        if s.temperature <= 0:        # greedy: the pre-redesign argmax path
+            first_tok = int(jnp.argmax(logits[0, plen - 1]))
+        else:
+            first_tok = int(T.sample_tokens(
+                logits[:, plen - 1],
+                jnp.full(1, s.temperature, jnp.float32),
+                jnp.full(1, s.top_k, jnp.int32),
+                jnp.full(1, s.top_p, jnp.float32),
+                jnp.full(1, s.effective_seed(rid), jnp.int32),
+                jnp.zeros(1, jnp.int32))[0])
         return first_tok, cache, plen, metrics, jnp.asarray(mask)
 
-    def serve(self, requests, *, num_slots: int = 8, eos_id=None,
-              control: BalancerControlPlane | None = None,
-              time_scale: float = 1.0,
-              verbose: bool = False) -> ServeResult:
-        """Continuous-batching replay of `requests` (list[GenRequest]).
+    # ------------------------------------------------- request-level API
 
-        The serving clock starts at t=0 and advances by the modeled
-        iteration latency when a `control` plane is attached (so TTFT /
-        TPOT / E2E reflect the balancer under test), else by measured
-        wall time. Requests are admitted when the clock passes their
-        arrival and a KV slot is free. `time_scale` multiplies the clock
-        advance — smoke models' modeled service times are orders of
-        magnitude faster than real-trace arrival gaps, so scaling the
-        clock restores a production-like arrival/service ratio (and with
-        it, actual batch concurrency).
-        """
+    def start(self, *, num_slots: int = 8, eos_id=None,
+              control: ControlPlane | None = None,
+              time_scale: float = 1.0) -> None:
+        """Open a serving session (slot pool + scheduler + clock). The
+        serving clock starts at t=0 and advances by the modeled iteration
+        latency when a `control` plane is attached (so TTFT / TPOT / E2E
+        reflect the balancer under test), else by measured wall time.
+        `time_scale` multiplies the clock advance — smoke models' modeled
+        service times are orders of magnitude faster than real-trace
+        arrival gaps, so scaling restores a production-like
+        arrival/service ratio (and with it, actual batch concurrency)."""
         if self.cfg.encdec is not None:
             raise NotImplementedError(
                 "continuous batching needs per-slot cache lengths, which "
                 "encoder-decoder decode does not support (scalar-only "
                 "positional offsets) — use the fixed-batch prefill/decode "
                 "API for enc-dec models")
-        # collect gate inputs for this serve only when some predictor
-        # consumes them (engine state is not mutated)
+        self._session = _Session(self.cfg, self.params, num_slots,
+                                 self.max_len, eos_id, control, time_scale)
+
+    def close(self) -> None:
+        self._session = None
+
+    @property
+    def _sess(self) -> _Session:
+        if self._session is None:
+            self.start()
+        return self._session
+
+    def submit(self, req: GenRequest) -> RequestHandle:
+        """Enqueue one request into the running session (opened with
+        defaults if needed). A NaN arrival means "now" (live submission);
+        trace replays carry their own arrival times. Returns a handle
+        whose status is `rejected` if the request cannot ever fit a KV
+        slot (admission control)."""
+        sess = self._sess
+        if math.isnan(req.arrival):
+            req.arrival = sess.now
+        ok = sess.sched.submit(req)
+        return RequestHandle(req, self, _rejected=not ok)
+
+    def cancel(self, handle: RequestHandle) -> bool:
+        """Cancel a queued or mid-decode request. A running request's KV
+        slot is recycled immediately — the next pending arrival can be
+        admitted on the very next ``step``. Returns False if the request
+        had already finished (or the session is gone)."""
+        sess = self._session
+        if sess is None:
+            return False
+        return sess.sched.cancel(handle.req, sess.now)
+
+    def step(self) -> list[TokenEvent]:
+        """ONE serving iteration: admit every arrived request that fits a
+        free slot (each prefilled alone, spliced into the pool), then run
+        one batched decode step over the whole pool and sample all slots
+        in one jitted call. Returns the tokens generated this iteration.
+        Each admission and the decode step drive the control plane."""
+        sess = self._sess
+        sched, kv = sess.sched, sess.kv
+        events: list[TokenEvent] = []
+        if sched.done:
+            return events
+        if not sched.running:
+            nxt = sched.next_arrival()
+            if nxt is not None:
+                sess.now = max(sess.now, nxt)
         collect = self._collect or (
-            control is not None and control.predictor is not None
+            sess.control is not None and sess.control.predictor is not None
             and self.cfg.is_moe)
-        step = self._get_step(collect)
-        kv = SlotKVCache(self.cfg, self.params, num_slots, self.max_len)
-        sched = ContinuousBatchingScheduler(kv, eos_id=eos_id)
-        for r in sorted(requests, key=lambda r: r.arrival):
-            sched.submit(r)
-        now = 0.0
-        cur = np.zeros(num_slots, np.int32)
-        occupancy = []
-        iters = prefills = 0
-        wall0 = time.perf_counter()
-        while not sched.done:
-            if not sched.running:
-                nxt = sched.next_arrival()
-                if nxt is not None:
-                    now = max(now, nxt)
-            # admission: prefill every arrived request that fits a slot
-            while (req := sched.pop_admissible(now)) is not None:
-                t0 = time.perf_counter()
-                tok, cache1, plen, metrics, mask = \
-                    self.prefill_request(req.prompt, collect=collect)
-                dt = None
-                if control is not None and "expert_load" in metrics:
-                    dt = control.on_iteration(
-                        now, self._gate_inputs(metrics),
-                        metrics["expert_load"], token_mask=mask)
-                self._drive_controller(metrics, token_mask=mask)
-                if dt is None:
-                    dt = time.perf_counter() - t0
-                slot = kv.alloc()
-                kv.insert(slot, cache1, plen)
-                sched.start(req, slot, now)
-                now += dt * time_scale
-                prefills += 1
-                cur[slot] = tok
-                sched.on_token(slot, tok, now)   # TTFT: end of prefill
-            if not sched.running:
-                continue
-            # one batched decode step over the whole pool (static shapes)
+        # admission: prefill every arrived request that fits a slot
+        while (req := sched.pop_admissible(sess.now)) is not None:
             t0 = time.perf_counter()
-            lengths, active = kv.step_lengths()
-            batch = {"tokens": jnp.asarray(cur[:, None]), "active": active}
-            logits, kv.cache, metrics = step(
-                self.params, batch, kv.cache, lengths)
-            toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            tok, cache1, plen, metrics, mask = self.prefill_request(
+                req.prompt, collect=collect, sampling=req.sampling,
+                rid=req.rid)
             dt = None
-            if control is not None and "expert_load" in metrics:
-                dt = control.on_iteration(
-                    now, self._gate_inputs(metrics),
-                    metrics["expert_load"], token_mask=active)
-            self._drive_controller(metrics, token_mask=active)
+            if sess.control is not None and "expert_load" in metrics:
+                dt = sess.control.step(
+                    sess.now, self._gate_inputs(metrics),
+                    metrics["expert_load"], token_mask=mask).latency_s
+            self._drive_controller(metrics, token_mask=mask)
             if dt is None:
                 dt = time.perf_counter() - t0
-            now += dt * time_scale
-            iters += 1
-            self.iteration += 1
-            occupancy.append(len(sched.running))
-            kv.advance()
-            for slot in list(sched.running):
-                cur[slot] = int(toks[slot])
-                sched.on_token(slot, int(toks[slot]), now)
-            if verbose and iters % 50 == 0:
-                print(f"  t={now:8.2f}s iter={iters} "
-                      f"active={len(sched.running)} "
-                      f"pending={len(sched.pending)} "
-                      f"done={len(sched.finished)}")
+            slot = kv.alloc()
+            kv.insert(slot, cache1, plen, owner=req.rid)
+            sess.bind_slot(slot, req)
+            sched.start(req, slot, sess.now)
+            sess.now += dt * sess.time_scale
+            sess.prefills += 1
+            sess.cur[slot] = tok
+            sess.count[slot] = 1
+            done = sched.on_token(slot, tok, sess.now)  # TTFT: prefill end
+            events.append(TokenEvent(req.rid, tok, done))
+        if not sched.running:
+            return events
+        # one batched decode step over the whole pool (static shapes),
+        # then one jitted sampling call over every slot
+        t0 = time.perf_counter()
+        lengths, active = kv.step_lengths()
+        step_fn = self._get_step(collect)
+        batch = {"tokens": jnp.asarray(sess.cur[:, None]), "active": active}
+        logits, kv.cache, metrics = step_fn(
+            self.params, batch, kv.cache, lengths)
+        if any(sess.temp[s] > 0 for s in sched.running):
+            toks = np.asarray(T.sample_tokens(
+                logits[:, -1], jnp.asarray(sess.temp),
+                jnp.asarray(sess.topk), jnp.asarray(sess.topp),
+                jnp.asarray(sess.seed), jnp.asarray(sess.count)))
+        else:   # all-greedy batch: skip the sampler's per-slot sort work
+            toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        dt = None
+        if sess.control is not None and "expert_load" in metrics:
+            dt = sess.control.step(
+                sess.now, self._gate_inputs(metrics),
+                metrics["expert_load"], token_mask=active).latency_s
+        self._drive_controller(metrics, token_mask=active)
+        if dt is None:
+            dt = time.perf_counter() - t0
+        sess.now += dt * sess.time_scale
+        sess.iters += 1
+        self.iteration += 1
+        sess.occupancy.append(len(sched.running))
+        kv.advance()
+        for slot in list(sched.running):
+            tok = int(toks[slot])
+            sess.cur[slot] = tok
+            sess.count[slot] += 1
+            req = sched.running[slot]
+            done = sched.on_token(slot, tok, sess.now)
+            events.append(TokenEvent(req.rid, tok, done))
+        return events
+
+    def stream(self, handle: RequestHandle) -> Iterator[int]:
+        """Incrementally yield `handle`'s tokens, driving ``step`` while
+        the request still has work in flight. Ends on finish (EOS / stop
+        sequence / budget) or cancellation."""
+        sent = 0
+        while True:
+            toks = handle.req.tokens
+            while sent < len(toks):
+                yield toks[sent]
+                sent += 1
+            if handle.status in ("finished", "cancelled", "rejected"):
+                return
+            if self._session is None or self._session.sched.done:
+                return
+            self.step()
+
+    def run(self, *, verbose: bool = False) -> ServeResult:
+        """Drive ``step`` until the session has no pending or running
+        requests, then snapshot the session's metrics."""
+        sess = self._sess
+        while not sess.sched.done:
+            self.step()
+            if verbose and sess.iters % 50 == 0:
+                print(f"  t={sess.now:8.2f}s iter={sess.iters} "
+                      f"active={len(sess.sched.running)} "
+                      f"pending={len(sess.sched.pending)} "
+                      f"done={len(sess.sched.finished)}")
+        return self.result()
+
+    def result(self) -> ServeResult:
+        if self._session is None:
+            raise RuntimeError("no serving session — call start() / "
+                               "serve() first")
+        sess = self._session
         return ServeResult(
-            records=sched.metrics(), iterations=iters, prefills=prefills,
-            rejected=len(sched.rejected),
-            mean_batch_occupancy=float(np.mean(occupancy))
-            if occupancy else 0.0,
-            wall_s=time.perf_counter() - wall0, control=control)
+            records=sess.sched.metrics(), iterations=sess.iters,
+            prefills=sess.prefills, rejected=len(sess.sched.rejected),
+            cancelled=len(sess.sched.cancelled),
+            mean_batch_occupancy=float(np.mean(sess.occupancy))
+            if sess.occupancy else 0.0,
+            wall_s=time.perf_counter() - sess.wall0, control=sess.control)
+
+    # ------------------------------------------------------ trace replay
+
+    def serve(self, requests, *, num_slots: int = 8, eos_id=None,
+              control: ControlPlane | None = None,
+              time_scale: float = 1.0,
+              verbose: bool = False) -> ServeResult:
+        """Continuous-batching replay of `requests` (list[GenRequest]) —
+        a thin driver over the request-level API: open a session, submit
+        everything, run to completion."""
+        self.start(num_slots=num_slots, eos_id=eos_id, control=control,
+                   time_scale=time_scale)
+        for r in sorted(requests, key=lambda r: r.arrival):
+            self.submit(r)
+        res = self.run(verbose=verbose)
+        self.close()
+        return res
 
     @staticmethod
     def _gate_inputs(metrics):

@@ -40,6 +40,9 @@ class SlotKVCache:
       active   — host (num_slots,) bool; inactive slots still flow
                  through the batched step but their outputs are ignored
                  and their lengths frozen.
+      owners   — host (num_slots,) int64 request id occupying each slot
+                 (-1 when free) — lets cancellation / debugging map a
+                 slot back to its request without scanning the scheduler.
     """
 
     def __init__(self, cfg, params, num_slots: int, max_len: int):
@@ -49,6 +52,7 @@ class SlotKVCache:
         self.cache = T.init_cache(cfg, params, num_slots, max_len)
         self.lengths = np.zeros(num_slots, np.int32)
         self.active = np.zeros(num_slots, bool)
+        self.owners = np.full(num_slots, -1, np.int64)
         self._free = list(range(num_slots - 1, -1, -1))
 
     # ------------------------------------------------------------ slots
@@ -70,17 +74,20 @@ class SlotKVCache:
         if self.active[slot] or slot in self._free:
             raise ValueError(f"freeing slot {slot} in invalid state")
         self.lengths[slot] = 0
+        self.owners[slot] = -1
         self._free.append(slot)
 
     # ------------------------------------------------------------ data
 
-    def insert(self, slot: int, request_cache, length: int) -> None:
+    def insert(self, slot: int, request_cache, length: int,
+               owner: int = -1) -> None:
         """Splice a single-request (B=1) prefilled cache into `slot`."""
         assert 0 <= length <= self.max_len
         self.cache = _splice_tree(self.cache, request_cache,
                                   jnp.asarray(slot, jnp.int32))
         self.lengths[slot] = length
         self.active[slot] = True
+        self.owners[slot] = owner
 
     def release(self, slot: int) -> int:
         """Mark a finished request's slot inactive and recycle it."""

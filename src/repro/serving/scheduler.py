@@ -1,23 +1,65 @@
 """Continuous-batching request scheduler (paper §2.3 / §6.1).
 
-Requests arrive on a trace timeline, wait in an arrival-ordered queue,
-and are admitted into the running batch as KV slots free up: a request
-is prefilled alone, spliced into the slot pool, and from the next
-iteration decodes together with everything already in flight; it leaves
-the batch on EOS or its token budget and its slot is recycled
-immediately. Per-request TTFT / TPOT / E2E latencies are recorded
-against the serving clock the engine advances.
+Requests arrive on a trace timeline (or are submitted live through
+``ServingEngine.submit``), wait in an arrival-ordered queue, and are
+admitted into the running batch as KV slots free up: a request is
+prefilled alone, spliced into the slot pool, and from the next iteration
+decodes together with everything already in flight; it leaves the batch
+on EOS, a stop-token sequence, its token budget, or client cancellation
+— and its slot is recycled immediately. Per-request TTFT / TPOT / E2E
+latencies are recorded against the serving clock the engine advances.
+
+Each request carries frozen ``SamplingParams`` (temperature / top-k /
+top-p / seed / stop sequences / priority); admission among arrived
+requests is by priority (FCFS within a priority level).
 
 The scheduler is pure bookkeeping — model execution lives in
 ``repro.serving.engine``; slot memory in ``repro.serving.kv``.
 """
 from __future__ import annotations
 
+import bisect
 import math
-from collections import deque
 from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Frozen per-request decoding parameters.
+
+    temperature <= 0 selects greedy argmax (bit-identical to the
+    pre-sampling engine); top_k <= 0 and top_p >= 1 disable the
+    respective filters. `seed` keys the request's sample stream (None =>
+    derived from the request id, still deterministic across runs).
+    `stop` is a tuple of stop-token sequences — generation ends when the
+    output's tail matches any of them (the stop tokens are kept in the
+    output). Higher `priority` wins admission among arrived requests."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+    stop: tuple = ()               # tuple[tuple[int, ...], ...]
+    priority: int = 0
+
+    def __post_init__(self):
+        if self.top_p <= 0:
+            raise ValueError(
+                f"top_p={self.top_p} masks every token (the nucleus is "
+                "empty); use top_p=1.0 to disable the filter")
+        # normalise stop sequences to hashable int tuples; reject empties
+        stop = tuple(tuple(int(t) for t in s) for s in self.stop)
+        if any(len(s) == 0 for s in stop):
+            raise ValueError("empty stop sequence")
+        object.__setattr__(self, "stop", stop)
+
+    def effective_seed(self, rid: int) -> int:
+        return int(self.seed) if self.seed is not None else int(rid)
+
+
+GREEDY = SamplingParams()
 
 
 @dataclass
@@ -27,12 +69,14 @@ class GenRequest:
     arrival: float
     prompt: np.ndarray                 # (prompt_len,) int token ids
     max_new_tokens: int
+    sampling: SamplingParams = field(default_factory=SamplingParams)
     # runtime state, filled by the scheduler
     slot: int = -1
     tokens: list = field(default_factory=list)      # generated ids
     t_admitted: float = math.nan
     t_first_token: float = math.nan
     t_finish: float = math.nan
+    finish_reason: str = ""            # length | eos | stop | cancelled
 
     @property
     def prompt_len(self) -> int:
@@ -60,10 +104,17 @@ class RequestMetrics:
 
 
 def percentile_summary(records: list[RequestMetrics]) -> dict:
-    """{metric: {mean, p50, p95, p99}} over finished requests."""
+    """{metric: {mean, p50, p95, p99}} over finished requests.
+
+    TPOT is a per-*subsequent*-token latency, undefined for single-token
+    requests — those are excluded from the TPOT statistics (they would
+    enter as 0.0 and drag the mean/p50 down) but still count toward
+    TTFT and E2E."""
     out = {}
     for m in ("ttft", "tpot", "e2e"):
-        xs = np.asarray([getattr(r, m) for r in records], np.float64)
+        rs = records if m != "tpot" else \
+            [r for r in records if r.out_tokens > 1]
+        xs = np.asarray([getattr(r, m) for r in rs], np.float64)
         if xs.size == 0:
             out[m] = {"mean": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0}
         else:
@@ -80,33 +131,52 @@ class ContinuousBatchingScheduler:
     def __init__(self, kv, *, eos_id: int | None = None):
         self.kv = kv
         self.eos_id = eos_id
-        self.pending: deque[GenRequest] = deque()
+        self.pending: list[GenRequest] = []          # (arrival, seq)-sorted
+        self._seq = 0                                # submission tiebreak
+        self._keys: dict[int, tuple] = {}            # id(req) -> sort key
         self.running: dict[int, GenRequest] = {}     # slot -> request
         self.finished: list[GenRequest] = []
+        self.cancelled: list[GenRequest] = []
         self.rejected: list[GenRequest] = []
 
     # --------------------------------------------------------- admission
 
-    def submit(self, req: GenRequest) -> None:
+    def submit(self, req: GenRequest) -> bool:
         """Admission control: a request must fit its prompt plus token
         budget inside one slot's ring buffer (otherwise the early KV it
-        would still need gets overwritten)."""
+        would still need gets overwritten). Returns False on reject."""
         if req.prompt_len + req.max_new_tokens > self.kv.max_len \
                 or req.prompt_len == 0 or req.max_new_tokens < 1:
             self.rejected.append(req)
-            return
-        self.pending.append(req)
+            return False
+        key = (req.arrival, self._seq)
+        self._seq += 1
+        self._keys[id(req)] = key
+        bisect.insort(self.pending, req, key=lambda r: self._keys[id(r)])
+        return True
 
     def next_arrival(self) -> float | None:
         return self.pending[0].arrival if self.pending else None
 
     def pop_admissible(self, now: float) -> GenRequest | None:
-        """Next request that has arrived by `now`, if a slot is free.
-        FCFS: a not-yet-arrived head does not unblock later arrivals."""
-        if (self.pending and self.kv.num_free > 0
-                and self.pending[0].arrival <= now):
-            return self.pending.popleft()
-        return None
+        """Highest-priority request that has arrived by `now`, if a slot
+        is free; FCFS within a priority level (the queue is kept
+        arrival-sorted, so a not-yet-arrived head means nothing has
+        arrived)."""
+        if not self.pending or self.kv.num_free == 0:
+            return None
+        best = None
+        for i, r in enumerate(self.pending):
+            if r.arrival > now:
+                break                      # pending is arrival-sorted
+            if best is None or r.sampling.priority \
+                    > self.pending[best].sampling.priority:
+                best = i
+        if best is None:
+            return None
+        req = self.pending.pop(best)
+        del self._keys[id(req)]
+        return req
 
     def start(self, req: GenRequest, slot: int, now: float) -> None:
         """Bind a freshly-prefilled request to its slot: it joins the
@@ -117,6 +187,13 @@ class ContinuousBatchingScheduler:
 
     # --------------------------------------------------------- progress
 
+    def _stop_hit(self, req: GenRequest) -> bool:
+        for s in req.sampling.stop:
+            if len(req.tokens) >= len(s) \
+                    and tuple(req.tokens[-len(s):]) == s:
+                return True
+        return False
+
     def on_token(self, slot: int, token: int, now: float) -> bool:
         """Record one generated token for the request in `slot`; returns
         True (and recycles the slot) when the request finishes."""
@@ -124,14 +201,42 @@ class ContinuousBatchingScheduler:
         if not req.tokens:
             req.t_first_token = now
         req.tokens.append(int(token))
-        done = (len(req.tokens) >= req.max_new_tokens
-                or (self.eos_id is not None and int(token) == self.eos_id))
-        if done:
-            req.t_finish = now
-            del self.running[slot]
-            self.kv.release(slot)
-            self.finished.append(req)
-        return done
+        if self.eos_id is not None and int(token) == self.eos_id:
+            req.finish_reason = "eos"
+        elif self._stop_hit(req):
+            req.finish_reason = "stop"
+        elif len(req.tokens) >= req.max_new_tokens:
+            req.finish_reason = "length"
+        else:
+            return False
+        req.t_finish = now
+        del self.running[slot]
+        self.kv.release(slot)
+        self.finished.append(req)
+        return True
+
+    def cancel(self, req: GenRequest, now: float) -> bool:
+        """Client-side cancellation: a pending request leaves the queue;
+        a running request releases its KV slot immediately (mid-decode —
+        the freed slot admits the next pending arrival on the very next
+        iteration). Returns False if the request already left."""
+        if id(req) in self._keys:
+            # remove by IDENTITY: list.remove would use dataclass __eq__,
+            # which compares numpy prompt arrays (ambiguous-truth crash)
+            # and could drop a different but equal-looking request
+            idx = next(i for i, r in enumerate(self.pending) if r is req)
+            del self.pending[idx]
+            del self._keys[id(req)]
+        elif req.slot in self.running \
+                and self.running[req.slot] is req:
+            del self.running[req.slot]
+            self.kv.release(req.slot)
+        else:
+            return False
+        req.finish_reason = "cancelled"
+        req.t_finish = now
+        self.cancelled.append(req)
+        return True
 
     @property
     def done(self) -> bool:
@@ -141,21 +246,48 @@ class ContinuousBatchingScheduler:
         return [RequestMetrics.of(r) for r in self.finished]
 
 
+@dataclass(frozen=True)
+class ClipReport:
+    """What ``requests_from_trace`` had to clip to fit the slot ring
+    buffers: trace token counts are drawn for full-scale models, so smoke
+    replays routinely truncate them. Surfaced by the drivers so silent
+    clipping can't skew a benchmark unnoticed."""
+    total: int = 0
+    prompts_clipped: int = 0           # in_tokens > max_len // 2
+    budgets_clipped: int = 0           # out_tokens cut (slot fit / cap)
+
+    @property
+    def any(self) -> bool:
+        return bool(self.prompts_clipped or self.budgets_clipped)
+
+    def __str__(self):
+        return (f"{self.prompts_clipped}/{self.total} prompts and "
+                f"{self.budgets_clipped}/{self.total} budgets clipped")
+
+
 def requests_from_trace(trace_requests, vocab_size: int, *, max_len: int,
-                        seed: int = 0,
-                        max_new_cap: int = 0) -> list[GenRequest]:
+                        seed: int = 0, max_new_cap: int = 0,
+                        sampling: SamplingParams = GREEDY,
+                        ) -> tuple[list[GenRequest], ClipReport]:
     """Materialise ``core.trace.Request`` arrivals (which only carry token
     COUNTS) into concrete prompts for the real model, clipping each
-    request to fit a slot. `max_new_cap` > 0 additionally caps per-request
-    generation (keeps CPU replays bounded)."""
+    request to fit a slot; every request carries `sampling`.
+    `max_new_cap` > 0 additionally caps per-request generation (keeps CPU
+    replays bounded). Returns (requests, ClipReport) so callers see how
+    much the trace was cut down."""
     rng = np.random.default_rng(seed)
     out = []
+    p_clip = b_clip = 0
     for i, r in enumerate(trace_requests):
         in_t = int(min(r.in_tokens, max(1, max_len // 2)))
         out_t = int(min(r.out_tokens, max_len - in_t))
         if max_new_cap:
             out_t = min(out_t, max_new_cap)
+        p_clip += in_t < r.in_tokens
+        b_clip += max(1, out_t) < r.out_tokens
         prompt = rng.integers(0, vocab_size, size=in_t, dtype=np.int32)
         out.append(GenRequest(rid=i, arrival=float(r.arrival), prompt=prompt,
-                              max_new_tokens=max(1, out_t)))
-    return out
+                              max_new_tokens=max(1, out_t),
+                              sampling=sampling))
+    return out, ClipReport(total=len(out), prompts_clipped=p_clip,
+                           budgets_clipped=b_clip)

@@ -13,7 +13,7 @@ from repro.core.balancer import EPLB
 from repro.core.plan import LayerPlan
 from repro.distributed.ep import plan_to_tables
 from repro.models import model as M
-from repro.serving.engine import (BalancerControlPlane, MoElessController,
+from repro.serving.engine import (ControlPlane, MoElessController,
                                   ServingEngine)
 from repro.serving.kv import SlotKVCache
 from repro.serving.scheduler import (ContinuousBatchingScheduler, GenRequest,
@@ -143,7 +143,7 @@ def test_balancer_control_plane_meters_all_strategies(moe_setup):
     n_moe = cfg.num_layers // cfg.moe.every_n_layers
     for strategy in ("megatron-lm", "eplb", "oracle", "moeless"):
         engine = ServingEngine(cfg, params, max_len=32)
-        cp = BalancerControlPlane(cfg, strategy, num_devices=4)
+        cp = ControlPlane(cfg, strategy, num_devices=4)
         res = engine.serve(reqs, num_slots=2, control=cp)
         n_iter = res.iterations + res.prefills
         assert cp.host_transfers == n_iter
@@ -244,9 +244,17 @@ def test_plan_to_tables_spills_on_overflow():
 def test_requests_from_trace_clipping():
     from repro.core.trace import Request
     trace = [Request(0.5, 300, 500), Request(1.0, 3, 2)]
-    reqs = requests_from_trace(trace, vocab_size=64, max_len=32,
-                               max_new_cap=8)
+    reqs, clip = requests_from_trace(trace, vocab_size=64, max_len=32,
+                                     max_new_cap=8)
     assert reqs[0].prompt_len <= 16
     assert reqs[0].prompt_len + reqs[0].max_new_tokens <= 32
     assert reqs[0].max_new_tokens <= 8
     assert reqs[1].prompt_len == 3 and reqs[1].max_new_tokens == 2
+    # the clipping is REPORTED, not silent (satellite): request 0 had both
+    # its prompt and its budget cut, request 1 fits untouched
+    assert clip.total == 2
+    assert clip.prompts_clipped == 1 and clip.budgets_clipped == 1
+    assert clip.any and "1/2" in str(clip)
+    _, clean = requests_from_trace([Request(0.0, 4, 4)], vocab_size=64,
+                                   max_len=32)
+    assert not clean.any
