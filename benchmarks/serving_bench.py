@@ -71,6 +71,21 @@ def main(slots: int = 8, gen: int = 32, prompt_len: int = 16,
     res_c = engine.serve(mk_reqs(), num_slots=slots)
     ctl_s = time.perf_counter() - t0
 
+    # batched + control plane + EXECUTING expert runtime: the plans are
+    # applied as slot diffs and the MoE layers decode through the EP
+    # slot data plane; cold/warm/prewarm and bytes moved come from the
+    # runtime's own meters
+    engine = ServingEngine(cfg, params, max_len=max_len,
+                           expert_runtime="on")
+    engine.serve(mk_reqs()[:1], num_slots=slots,
+                 control=MoElessController(cfg, num_devices=8,
+                                           predictor=pred))
+    ctrl_r = MoElessController(cfg, num_devices=8, predictor=pred)
+    t0 = time.perf_counter()
+    res_r = engine.serve(mk_reqs(), num_slots=slots, control=ctrl_r)
+    rtm_s = time.perf_counter() - t0
+    rst = res_r.runtime.finalize(res_r.clock_s)
+
     # rows in the harness format: (name, us_per_token, derived)
     tokens = slots * gen
     syncs = ctrl.host_transfers - n0
@@ -89,6 +104,12 @@ def main(slots: int = 8, gen: int = 32, prompt_len: int = 16,
         ("serve_batched+control", ctl_s / tokens * 1e6,
          f"{tokens / ctl_s:.1f} tok/s "
          f"({syncs / max(iters, 1):.2f} host syncs/iter)"),
+        ("serve_batched+runtime", rtm_s / tokens * 1e6,
+         f"{tokens / rtm_s:.1f} tok/s "
+         f"(cold/warm/prewarm {rst.cold_starts}/{rst.warm_starts}/"
+         f"{rst.prewarmed}, {rst.transfers} slot transfers, "
+         f"{rst.bytes_moved / 1e6:.1f}MB moved, "
+         f"{rst.instance_seconds_gb:.3g} GB-s)"),
     ]
 
 

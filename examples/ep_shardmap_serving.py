@@ -38,13 +38,23 @@ def main():
     weights = {"w_gate": wg, "w_up": wu, "w_down": wd}
 
     plan = static_plan(E, 2)
+    # pad the expert bank ONCE; per-iteration materialisation then only
+    # copies slots whose resident expert changed (function locality —
+    # an unchanged plan moves zero weights)
+    padded = EP.pad_expert_bank(weights)
+    slot_w = prev_se = None
     with mesh:
         for it in range(4):
             x = jax.random.normal(jax.random.fold_in(key, it),
                                   (4, 32, D), jnp.float32)
             tables = EP.plan_to_tables(plan, ep=2, slots_per_device=4)
-            slot_w = EP.materialise_slots(weights, tables["slot_expert"],
-                                          mesh)
+            slot_w = EP.materialise_slots(
+                weights, tables["slot_expert"], mesh, padded=padded,
+                prev=slot_w, prev_slot_expert=prev_se)
+            changed = "all" if prev_se is None else int(
+                (np.asarray(prev_se)
+                 != np.asarray(tables["slot_expert"])).sum())
+            prev_se = tables["slot_expert"]
             y, loads = EP.moe_ep_layer(
                 x, rw, slot_w, tables, mesh=mesh, num_experts=E,
                 top_k=TOPK, slots_per_device=4)
@@ -53,7 +63,8 @@ def main():
             rank_load = plan.per_device_load(loads)
             print(f"iter {it}: expert loads={loads.astype(int)} "
                   f"rank loads={rank_load.round(0)} "
-                  f"replicas={plan.replicas.tolist()}")
+                  f"replicas={plan.replicas.tolist()} "
+                  f"slots updated={changed}")
             # MoEless control plane: next iteration's plan from this one's
             # loads (predictor distance handled upstream)
             reps = scale_layer(loads, cv_threshold=0.2,

@@ -77,8 +77,10 @@ def run_real_model(args):
         predictor = P.from_gates(cfg, params, distance=args.distance)
         trace = generate_requests(TraceConfig(
             duration_s=args.duration, base_rate=args.rate, seed=args.seed))
+        rt_note = ", expert runtime ON (EP slot data plane)" \
+            if args.expert_runtime == "on" else ""
         print(f"\n=== {arch} [real model, continuous batching, "
-              f"impl={args.impl}, temperature={args.temperature}] "
+              f"impl={args.impl}, temperature={args.temperature}{rt_note}] "
               f"({len(trace)} requests, "
               f"{args.slots} KV slots, {args.devices} modeled devices) ===")
         print(f"{'strategy':12s} {'reqs':>5s} {'iters':>6s} {'occ':>5s} "
@@ -86,7 +88,8 @@ def run_real_model(args):
               f"{'E2E p50/p99 ms':>17s} {'layer ms':>9s} {'cost':>9s}")
         clip = None
         for strategy in STRATEGIES:
-            engine = ServingEngine(cfg, params, max_len=args.max_len)
+            engine = ServingEngine(cfg, params, max_len=args.max_len,
+                                   expert_runtime=args.expert_runtime)
             control = ControlPlane(
                 cfg, strategy, num_devices=args.devices,
                 predictor=predictor if strategy == "moeless" else None,
@@ -101,6 +104,14 @@ def run_real_model(args):
             res = engine.serve(reqs, num_slots=args.slots, control=control,
                                time_scale=args.time_scale)
             s = res.summary()
+            rt_info = ""
+            if res.runtime is not None:
+                st = res.runtime.finalize(res.clock_s)
+                rt_info = (f", runtime c/w/p "
+                           f"{st.cold_starts}/{st.warm_starts}/"
+                           f"{st.prewarmed}, "
+                           f"{st.bytes_moved / 1e6:.1f}MB moved, "
+                           f"{st.instance_seconds_gb:.3g} GB-s resident")
             print(f"{strategy:12s} {len(res.records):5d} "
                   f"{res.iterations:6d} {res.mean_batch_occupancy:5.1f} "
                   f"{s['ttft']['p50']*1e3:8.2f}/{s['ttft']['p99']*1e3:8.2f} "
@@ -108,7 +119,7 @@ def run_real_model(args):
                   f"{s['e2e']['p50']*1e3:8.1f}/{s['e2e']['p99']*1e3:8.1f} "
                   f"{control.mean_layer_ms():9.4f} {control.cost:9.3g} "
                   f"[{res.wall_s:.1f}s wall, "
-                  f"{control.host_transfers} host syncs]")
+                  f"{control.host_transfers} host syncs{rt_info}]")
         if clip is not None and clip.any:
             print(f"note: trace clipped to fit max_len={args.max_len} "
                   f"slots ({clip})")
@@ -142,6 +153,13 @@ def main():
                     help="kernel backend for the real-model hot paths "
                          "(expert FFN, decode attention); auto = pallas "
                          "on TPU, jnp reference elsewhere")
+    ap.add_argument("--expert-runtime", default="off",
+                    choices=("off", "on"),
+                    help="execute the control plane's replica plans: "
+                         "'on' applies each iteration's plans as slot "
+                         "diffs to device-resident expert weight banks "
+                         "and decodes the MoE layers through the EP "
+                         "slot data plane (real-model path only)")
     ap.add_argument("--time-scale", type=float, default=5000.0,
                     help="serving-clock multiplier for the real-model "
                          "path: smoke-model modeled latencies are ~1000x "

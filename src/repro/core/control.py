@@ -27,6 +27,9 @@ plane — the scale/place/meter loop is NOT duplicated there.
 """
 from __future__ import annotations
 
+import math
+from dataclasses import dataclass
+
 import numpy as np
 
 from repro.core import costmodel as CM
@@ -35,6 +38,27 @@ from repro.core.costmodel import derive_coeffs
 
 
 # ------------------------------------------------------------- metering
+
+# modeled per-layer execution time a serverless commit extends an
+# instance's keep-alive by (paper §5 asynchronous scaling); shared with
+# the executing ExpertRuntime so pool and runtime lifecycles agree
+MOELESS_EXEC_TIME = 0.05
+
+
+def default_slots_per_device(num_experts: int, num_devices: int) -> int:
+    """Per-device expert slot cap covering the scaler's 2E replica
+    budget with headroom — the ONE default shared by the controller's
+    slot-table export and the executing ExpertRuntime, so plan and
+    execution always agree on slot geometry."""
+    return max(2, (2 * num_experts) // num_devices + 1)
+
+
+def moeless_lead_time(actual: np.ndarray, *, coeffs, num_devices: int,
+                      prediction_distance: int = 1) -> float:
+    """The predictor's lead: forward time of `distance` earlier layers —
+    the window a cold start can hide inside (paper §5)."""
+    return prediction_distance * (coeffs.t_misc + coeffs.alpha
+                                  * actual.sum() / num_devices)
 
 
 def meter_layer(bal, t: float, layer: int, predicted: np.ndarray,
@@ -46,10 +70,11 @@ def meter_layer(bal, t: float, layer: int, predicted: np.ndarray,
     strategies are timed at perfect balance. Returns
     (t_fwd_seconds, plan)."""
     if bal.name == "moeless":
-        lead = prediction_distance * (coeffs.t_misc + coeffs.alpha
-                                      * actual.sum() / num_devices)
+        lead = moeless_lead_time(actual, coeffs=coeffs,
+                                 num_devices=num_devices,
+                                 prediction_distance=prediction_distance)
         plan, delay = bal.plan(t, layer, predicted, actual,
-                               lead_time=lead, exec_time=0.05)
+                               lead_time=lead, exec_time=MOELESS_EXEC_TIME)
     else:
         plan, delay = bal.plan(t, layer, predicted, actual)
     bal.observe(t, layer, actual)
@@ -90,18 +115,51 @@ def _fetch_loads(predictor, top_k, gate_inputs, actual_loads, token_mask):
             np.asarray(acts, np.float64))
 
 
+@dataclass(frozen=True)
+class PlanEvent:
+    """Everything the data plane needs to EXECUTE one (iteration, layer)
+    planning decision (consumed by ``serving.expert_runtime``):
+
+      plan       — the FULL replica plan (every replica, warm or cold);
+                   slot transfers are diffed against this.
+      served     — the effective warm-subset plan routed THIS iteration
+                   (replicas whose cold start the lead time could not
+                   hide join from the next iteration; serverful
+                   strategies: identical to `plan`).
+      lead_time  — the predictor's lead the commit happened under
+                   (``math.inf`` for serverful strategies: weights are
+                   statically resident, nothing is ever cold).
+      exec_time  — modeled layer execution time extending keep-alive.
+      serverless — serverless lifecycle: instances idle out via
+                   keep-alive. Serverful (False): a new plan REPLACES
+                   the deployment — replicas absent from it release
+                   their slot immediately (otherwise a periodic
+                   rebalancer like EPLB would pin every historical
+                   placement forever and exhaust the slot pool).
+    """
+    plan: object
+    served: object
+    lead_time: float = math.inf
+    exec_time: float = 0.0
+    serverless: bool = False
+
+
 class IterationOutcome:
     """What one control-plane iteration produced: the modeled iteration
     latency (the serving-clock advance), the cost billed for this
-    iteration, and the per-MoE-layer plans that will serve the next
-    iteration."""
+    iteration, the per-MoE-layer warm-subset plans that route the next
+    iteration, and the per-layer ``PlanEvent`` records an executing
+    expert runtime applies as slot diffs."""
 
-    __slots__ = ("latency_s", "cost", "plans")
+    __slots__ = ("latency_s", "cost", "plans", "events")
 
-    def __init__(self, latency_s: float, cost: float, plans: list):
+    def __init__(self, latency_s: float, cost: float, plans: list,
+                 events: list | None = None):
         self.latency_s = latency_s
         self.cost = cost
         self.plans = plans
+        self.events = events if events is not None else [
+            PlanEvent(plan=p, served=p) for p in plans]
 
     def __repr__(self):
         return (f"IterationOutcome(latency_s={self.latency_s:.6f}, "
@@ -185,7 +243,9 @@ class ControlPlane:
         pred, acts = self._loads(gate_inputs, actual_loads, token_mask)
         total = 0.0
         cost0 = self.cost
+        serverless = bool(getattr(self.bal, "serverless", False))
         plans = []
+        events = []
         for l in range(acts.shape[0]):
             t_fwd, plan = meter_layer(
                 self.bal, t, l, pred[l], acts[l], coeffs=self.coeffs,
@@ -199,11 +259,24 @@ class ControlPlane:
                 full_expert_bytes=self.full_expert_bytes,
                 m_misc=self.m_misc)
             plans.append(plan)
+            if serverless:
+                # the balancer returned the warm-subset plan; the FULL
+                # plan (incl. still-materialising replicas) is what the
+                # runtime diffs its slot state against
+                events.append(PlanEvent(
+                    plan=self.bal.prev[l], served=plan,
+                    lead_time=moeless_lead_time(
+                        acts[l], coeffs=self.coeffs,
+                        num_devices=self.num_devices,
+                        prediction_distance=self.prediction_distance),
+                    exec_time=MOELESS_EXEC_TIME, serverless=True))
+            else:
+                events.append(PlanEvent(plan=plan, served=plan))
         self.iter_latency.append(total)
         self.iterations += 1
         self.last_plans = plans
         return IterationOutcome(latency_s=total, cost=self.cost - cost0,
-                                plans=plans)
+                                plans=plans, events=events)
 
     # --------------------------------------------------------- summary
 
@@ -227,7 +300,7 @@ class MoElessController(ControlPlane):
                  slots_per_device: int = 0, predictor=None):
         e = cfg.moe.num_experts
         self.slots_per_device = slots_per_device \
-            or max(2, (2 * e) // num_devices + 1)
+            or default_slots_per_device(e, num_devices)
         super().__init__(
             cfg, "moeless", num_devices=num_devices, predictor=predictor,
             prediction_distance=prediction_distance,

@@ -80,6 +80,30 @@ class LayerPlan:
         return {(e, g) for e in range(self.num_experts)
                 for g in self.placement[e]}
 
+    def iter_replicas(self):
+        """Yield every (expert, device) replica in the canonical commit
+        order (expert-major, replica order within an expert). The
+        analytic ``ServerlessExpertPool`` and the executing
+        ``ExpertRuntime`` both walk plans in THIS order, so their
+        cold/warm/prewarm classification of duplicate (expert, device)
+        pairs agrees replica-for-replica."""
+        for e in range(self.num_experts):
+            for g in self.placement[e]:
+                yield e, int(g)
+
+    def diff_size(self, resident: set) -> int:
+        """Number of replicas in this plan with no warm (expert, device)
+        instance in `resident` — the minimal slot-transfer count needed
+        to execute the plan (function locality: warm replicas are never
+        re-copied)."""
+        seen = set(resident)
+        cold = 0
+        for key in self.iter_replicas():
+            if key not in seen:
+                cold += 1
+                seen.add(key)
+        return cold
+
 
 def static_plan(num_experts: int, num_devices: int) -> LayerPlan:
     """Megatron-LM baseline: one replica per expert, round-robin EP

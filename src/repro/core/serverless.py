@@ -15,6 +15,15 @@ from repro.core.costmodel import Hardware, V5E
 from repro.core.plan import LayerPlan
 
 
+def cold_start_latency(expert_bytes: float, hw: Hardware = V5E) -> float:
+    """Modeled cold start of ONE expert function instance: slot/program
+    activation plus streaming the replica weights over ICI. Shared by the
+    analytic ``ServerlessExpertPool`` and the executing
+    ``serving.expert_runtime.ExpertRuntime`` so both classify a replica
+    as prewarmed (hidden by the predictor's lead) or cold identically."""
+    return hw.instance_startup_s + expert_bytes / hw.ici_bw
+
+
 @dataclass
 class InstanceStats:
     cold_starts: int = 0
@@ -39,7 +48,7 @@ class ServerlessExpertPool:
     stats: InstanceStats = field(default_factory=InstanceStats)
 
     def cold_start_latency(self) -> float:
-        return self.hw.instance_startup_s + self.expert_bytes / self.hw.ici_bw
+        return cold_start_latency(self.expert_bytes, self.hw)
 
     def _reap(self, now: float) -> None:
         dead = [k for k, inst in self.instances.items()
@@ -58,23 +67,21 @@ class ServerlessExpertPool:
         Returns the set of (expert, device) pairs READY at exec time."""
         self._reap(now)
         ready = set()
-        for e in range(plan.num_experts):
-            for g in plan.placement[e]:
-                key = (e, g)
-                if key in self.instances:
-                    self.instances[key].last_used = now + lead_time \
-                        + exec_time
-                    self.stats.warm_starts += 1
+        for key in plan.iter_replicas():
+            if key in self.instances:
+                self.instances[key].last_used = now + lead_time \
+                    + exec_time
+                self.stats.warm_starts += 1
+                ready.add(key)
+            else:
+                cs = self.cold_start_latency()
+                if cs <= lead_time:
+                    self.stats.prewarmed += 1
                     ready.add(key)
                 else:
-                    cs = self.cold_start_latency()
-                    if cs <= lead_time:
-                        self.stats.prewarmed += 1
-                        ready.add(key)
-                    else:
-                        self.stats.cold_starts += 1
-                    self.instances[key] = _Instance(
-                        born=now, last_used=now + lead_time + exec_time)
+                    self.stats.cold_starts += 1
+                self.instances[key] = _Instance(
+                    born=now, last_used=now + lead_time + exec_time)
         return ready
 
     def resident_bytes(self, now: float) -> float:

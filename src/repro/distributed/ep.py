@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import math
 import warnings
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -120,21 +121,51 @@ def uniform_tables(num_experts: int, *, ep: int, slots_per_device: int):
                           slots_per_device=slots_per_device)
 
 
-def materialise_slots(expert_weights, slot_expert, mesh):
+def pad_expert_bank(expert_weights):
+    """Expert bank with one zero row appended (the empty-slot expert id
+    E indexes it). Pad ONCE and reuse across iterations — re-padding the
+    whole bank per materialise call was the old hot-path waste."""
+    return {k: jnp.concatenate([w, jnp.zeros_like(w[:1])], axis=0)
+            for k, w in expert_weights.items()}
+
+
+def _slot_spec(k):
+    return P("ep", None, "tp") if k != "w_down" else P("ep", "tp", None)
+
+
+def materialise_slots(expert_weights, slot_expert, mesh, *, padded=None,
+                      prev=None, prev_slot_expert=None):
     """Fill the per-rank slot weight banks from the expert bank.
     expert_weights: dict w_gate/w_up (E, D, F), w_down (E, F, D), plus a
     zero row appended for empty slots. Returns dict of (S_total, ...)
     arrays sharded P('ep', None, 'tp'). The gather moves exactly the
-    replica weights — the serverless cold-start traffic."""
-    def pad(w):
-        return jnp.concatenate([w, jnp.zeros_like(w[:1])], axis=0)
+    replica weights — the serverless cold-start traffic.
 
+    `padded` is an optional pre-padded bank from ``pad_expert_bank``
+    (skips re-padding every call). When `prev` (the previous slot banks)
+    and `prev_slot_expert` are given, only slots whose resident expert
+    CHANGED are gathered and written — warm slots are never re-copied
+    (function locality), so an unchanged plan moves zero bytes."""
+    if padded is None:
+        padded = pad_expert_bank(expert_weights)
+    if prev is not None and prev_slot_expert is not None:
+        changed = np.flatnonzero(np.asarray(slot_expert)
+                                 != np.asarray(prev_slot_expert))
+        if changed.size == 0:
+            return prev
+        new_experts = jnp.asarray(np.asarray(slot_expert)[changed])
+        idx = jnp.asarray(changed)
+        out = {}
+        for k, w in padded.items():
+            upd = prev[k].at[idx].set(w[new_experts])
+            out[k] = jax.lax.with_sharding_constraint(
+                upd, NamedSharding(mesh, _slot_spec(k)))
+        return out
     out = {}
-    for k, w in expert_weights.items():
-        spec = P("ep", None, "tp") if k != "w_down" else P("ep", "tp", None)
-        gathered = pad(w)[slot_expert]
+    for k, w in padded.items():
+        gathered = w[slot_expert]
         out[k] = jax.lax.with_sharding_constraint(
-            gathered, NamedSharding(mesh, spec))
+            gathered, NamedSharding(mesh, _slot_spec(k)))
     return out
 
 
@@ -144,11 +175,13 @@ def materialise_slots(expert_weights, slot_expert, mesh):
 def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
                  top_k: int, slots_per_device: int,
                  capacity_factor: float = 2.0, act: str = "swiglu",
-                 impl: str = "auto"):
+                 impl: str = "auto", token_mask=None):
     """x: (B, S, D) sharded P('data', 'ep', None) (replicated over 'tp').
     slot_w: dict of slot banks from materialise_slots.
     `impl` selects the grouped-FFN kernel backend for the per-rank slot
     compute (kernels.ops: auto | pallas | pallas_interpret | ref).
+    `token_mask` (B, S) excludes tokens (inactive continuous-batching
+    slots) from the expert-load metric; compute is unaffected.
     Returns y sharded like x, plus per-expert load metrics."""
     # lazy import: consumers of the slot-table helpers never pull in
     # pallas-tpu (see kernels._compat)
@@ -159,8 +192,10 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
     # pallas_call has no replication rule, so the Pallas backends need
     # the shard_map checker off; 'ref' keeps the default trace-time check
     smap = _shard_map if impl == "ref" else _shard_map_norep
+    if token_mask is None:
+        token_mask = jnp.ones(x.shape[:2], jnp.int32)
 
-    def local(x_loc, rw, wg, wu, wd, expert_slots, nrep):
+    def local(x_loc, mask_loc, rw, wg, wu, wd, expert_slots, nrep):
         b, s, d = x_loc.shape
         t = b * s
         xf = x_loc.reshape(t, d)
@@ -230,16 +265,57 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
         contrib = contrib * jnp.where(keep, w_flat, 0.0)[:, None]
         comb = jnp.zeros((t, d), jnp.float32).at[ftok].add(contrib)
 
-        loads = jnp.bincount(top_i.reshape(-1), length=num_experts)
+        mvec = jnp.repeat(mask_loc.reshape(-1).astype(jnp.int32), top_k)
+        loads = jnp.zeros(num_experts, jnp.int32).at[
+            top_i.reshape(-1)].add(mvec)
         loads = jax.lax.psum(loads, ("data", "ep"))
         return comb.reshape(b, s, d).astype(x_loc.dtype), loads
 
     fn = smap(
         local, mesh=mesh,
-        in_specs=(P("data", "ep", None), P(),
+        in_specs=(P("data", "ep", None), P("data", "ep"), P(),
                   P("ep", None, "tp"), P("ep", None, "tp"),
                   P("ep", "tp", None),
                   P(), P()),
         out_specs=(P("data", "ep", None), P()))
-    return fn(x, router_w, slot_w["w_gate"], slot_w["w_up"],
+    return fn(x, token_mask, router_w, slot_w["w_gate"], slot_w["w_up"],
               slot_w["w_down"], tables["expert_slots"], tables["nrep"])
+
+
+# ----------------------------------------------- serving hot-path hookup
+
+
+@dataclass(frozen=True)
+class EPContext:
+    """Static (trace-time) context for running MoE sublayers through the
+    EP slot data plane inside the jitted decode step. Closed over by the
+    engine's jitted step, never traced — only the slot tables/weights in
+    the per-layer ``ep_state`` pytree change between iterations, so the
+    replica plan is re-programmed without recompilation."""
+    mesh: object
+    slots_per_device: int          # PHYSICAL slots per EP mesh rank
+    capacity_factor: float
+
+
+def moe_ep_ffn(moe_params, h, state, ctx: EPContext, cfg,
+               token_mask=None):
+    """One MoE sublayer through ``moe_ep_layer`` with the runtime's live
+    slot tables/weights — the drop-in replacement for
+    ``models.moe.dispatch_moe`` in the batched-decode hot path.
+
+    `state`: {'expert_slots' (E, R_cap), 'nrep' (E,), 'w_gate'/'w_up'
+    (S, D, F), 'w_down' (S, F, D)} for THIS layer, maintained by
+    ``serving.expert_runtime.ExpertRuntime``. Returns (y, metrics) in
+    the ``dispatch_moe`` metrics shape (expert_load, aux_loss)."""
+    slot_w = {k: state[k] for k in ("w_gate", "w_up", "w_down")}
+    tables = {"expert_slots": state["expert_slots"], "nrep": state["nrep"]}
+    y, loads = moe_ep_layer(
+        h, moe_params["router"]["w_gate"], slot_w, tables, mesh=ctx.mesh,
+        num_experts=cfg.moe.num_experts, top_k=cfg.moe.top_k,
+        slots_per_device=ctx.slots_per_device,
+        capacity_factor=ctx.capacity_factor, act=cfg.act, impl=cfg.impl,
+        token_mask=token_mask)
+    # aux loss is a training-time metric; the serving hot path does not
+    # pay for the full-softmax probs it needs
+    return y, {"expert_load": loads,
+               "aux_loss": jnp.asarray(0.0, jnp.float32)}

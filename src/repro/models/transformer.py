@@ -141,9 +141,13 @@ def init_params(cfg, key):
 
 def _apply_sublayer(cfg, sub: SubLayer, p, x, positions, *, cache=None,
                     cache_len=None, enc_out=None, window=0,
-                    collect: bool = False, token_mask=None):
+                    collect: bool = False, token_mask=None,
+                    ep_ctx=None, ep_state=None):
     """One sublayer (mixer + optional cross-attn + ffn) with residuals.
-    Returns (x, new_cache, metrics)."""
+    When `ep_ctx`/`ep_state` are given, a MoE FFN executes through the
+    EP slot data plane (``distributed.ep.moe_ep_ffn``) with the expert
+    runtime's live slot tables/weights instead of the GShard capacity
+    dispatch. Returns (x, new_cache, metrics)."""
     new_cache = {}
     metrics = {}
     h = L.norm(x, p["norm1"], cfg.norm)
@@ -199,18 +203,27 @@ def _apply_sublayer(cfg, sub: SubLayer, p, x, positions, *, cache=None,
     if sub.ffn != "none":
         h = L.norm(x, p["norm2"], cfg.norm)
         if sub.ffn == "moe":
-            y, m = MOE.dispatch_moe(
-                p["moe"], h, top_k=cfg.moe.top_k,
-                num_experts=cfg.moe.num_experts,
-                capacity_factor=cfg.moe.capacity_factor, act=cfg.act,
-                groups=_moe_groups(cfg, h), token_mask=token_mask,
-                impl=cfg.impl)
+            if ep_ctx is not None and ep_state is not None:
+                # serving hot path: EP slot data plane with the expert
+                # runtime's live tables/weights (lazy import keeps the
+                # jnp-only model paths pallas-free)
+                from repro.distributed.ep import moe_ep_ffn
+                y, m = moe_ep_ffn(p["moe"], h, ep_state, ep_ctx, cfg,
+                                  token_mask=token_mask)
+            else:
+                y, m = MOE.dispatch_moe(
+                    p["moe"], h, top_k=cfg.moe.top_k,
+                    num_experts=cfg.moe.num_experts,
+                    capacity_factor=cfg.moe.capacity_factor, act=cfg.act,
+                    groups=_moe_groups(cfg, h), token_mask=token_mask,
+                    impl=cfg.impl)
             metrics["expert_load"] = m["expert_load"]
             metrics["aux_loss"] = m["aux_loss"]
             if collect:   # predictor fine-tuning dataset (paper §5)
                 metrics["gate_input"] = h
-                metrics["router_logits"] = m["router_logits"].reshape(
-                    h.shape[0], h.shape[1], -1)
+                if "router_logits" in m:
+                    metrics["router_logits"] = m["router_logits"].reshape(
+                        h.shape[0], h.shape[1], -1)
         else:
             y = L.ffn(p["ffn"], h, cfg.act)
         x = x + y
@@ -373,14 +386,20 @@ def init_cache(cfg, params, batch: int, max_len: int):
     return caches
 
 
-def decode_step(cfg, params, batch, cache, cache_len, *, window: int = 0,
-                collect: bool = False):
+def decode_step(cfg, params, batch, cache, cache_len, ep_state=None, *,
+                window: int = 0, collect: bool = False, ep_ctx=None):
     """One decode iteration: batch['tokens'] is (B, S_new) — S_new=1 for
     token-by-token decode, S_new=prompt_len for prefill-into-cache
     (cache_len=0). `cache_len` is a scalar, or a (B,) vector of per-row
     cache depths for the continuous-batching slot pool (encoder-decoder
-    models require the scalar form). Returns (logits (B,S_new,V),
-    new_cache, metrics)."""
+    models require the scalar form).
+
+    `ep_ctx` (static, closed over by jit) + `ep_state` (traced pytree:
+    one entry per sublayer pattern position, None for non-MoE positions,
+    else per-layer slot tables/weights stacked over periods) route every
+    MoE sublayer through the EP slot data plane — the expert runtime's
+    replica plans execute here without recompilation. Returns
+    (logits (B,S_new,V), new_cache, metrics)."""
     pattern = layer_pattern(cfg)
     x = _embed(cfg, params, batch)
     bsz, s_new = batch["tokens"].shape
@@ -405,7 +424,11 @@ def decode_step(cfg, params, batch, cache, cache_len, *, window: int = 0,
                                       (bsz, s_new))
 
     def body(h, xs):
-        layer_params, layer_cache = xs
+        if ep_state is None:
+            layer_params, layer_cache = xs
+            layer_ep = [None] * len(pattern)
+        else:
+            layer_params, layer_cache, layer_ep = xs
         new_caches = []
         ms = []
         for j, sub in enumerate(pattern):
@@ -414,7 +437,9 @@ def decode_step(cfg, params, batch, cache, cache_len, *, window: int = 0,
                                        cache_len=cache_len,
                                        enc_out=enc_out, window=window,
                                        collect=collect,
-                                       token_mask=token_mask)
+                                       token_mask=token_mask,
+                                       ep_ctx=ep_ctx,
+                                       ep_state=layer_ep[j])
             new_caches.append(nc)
             ms.append(m)
         y = {}
@@ -426,7 +451,9 @@ def decode_step(cfg, params, batch, cache, cache_len, *, window: int = 0,
                 [m["gate_input"] for m in ms if "gate_input" in m])
         return h, (new_caches, y)
 
-    x, (new_cache, ys) = jax.lax.scan(body, x, (params["layers"], cache))
+    xs_in = (params["layers"], cache) if ep_state is None \
+        else (params["layers"], cache, ep_state)
+    x, (new_cache, ys) = jax.lax.scan(body, x, xs_in)
     x = L.norm(x, params["final_norm"], cfg.norm)
     metrics = {}
     if "expert_load" in ys:

@@ -107,6 +107,8 @@ class ServeResult:
     mean_batch_occupancy: float
     wall_s: float
     control: ControlPlane | None = None
+    runtime: object | None = None     # ExpertRuntime when enabled
+    clock_s: float = 0.0              # final serving-clock time
 
     def summary(self) -> dict:
         return percentile_summary(self.records)
@@ -122,10 +124,11 @@ class _Session:
     feed the one jitted ``sample_tokens`` call."""
 
     def __init__(self, cfg, params, num_slots: int, max_len: int,
-                 eos_id, control, time_scale: float):
+                 eos_id, control, time_scale: float, runtime=None):
         self.kv = SlotKVCache(cfg, params, num_slots, max_len)
         self.sched = ContinuousBatchingScheduler(self.kv, eos_id=eos_id)
         self.control = control
+        self.runtime = runtime
         self.time_scale = time_scale
         self.now = 0.0
         self.cur = np.zeros(num_slots, np.int32)       # last token per slot
@@ -150,20 +153,38 @@ class _Session:
 
 class ServingEngine:
     """Prefill + decode with KV caches behind a request-level API;
-    optionally drives a MoEless controller each iteration."""
+    optionally drives a MoEless controller each iteration.
+
+    ``expert_runtime="on"`` attaches a ``serving.expert_runtime.
+    ExpertRuntime`` to every session: the control plane's replica plans
+    are EXECUTED — applied as slot diffs to device-resident expert
+    weight banks — and the batched decode's MoE layers run through the
+    EP slot data plane (``distributed.ep.moe_ep_layer``) with the
+    runtime's live tables/weights. Prefill stays on the capacity
+    dispatch path (identical in both modes). Requires a session
+    ``control`` plane (the plan source)."""
 
     def __init__(self, cfg, params, *, max_len: int = 512,
                  controller: ControlPlane | None = None,
-                 window: int = 0, impl: str | None = None):
+                 window: int = 0, impl: str | None = None,
+                 expert_runtime: str = "off"):
         if impl is not None:   # override the config's kernel backend
             from repro.kernels.ops import resolve_impl
             resolve_impl(impl)   # validate eagerly, not at first step
             cfg = cfg.with_(impl=impl)
+        if expert_runtime not in ("off", "on"):
+            raise ValueError(f"expert_runtime={expert_runtime!r} "
+                             "(expected 'off' or 'on')")
+        if expert_runtime == "on" and not cfg.is_moe:
+            raise ValueError("expert_runtime='on' needs an MoE model")
         self.cfg, self.params = cfg, params
         self.max_len = max_len
         self.controller = controller
         self.window = window
+        self.expert_runtime = expert_runtime
         self._steps: dict[bool, callable] = {}
+        self._ep_steps: dict = {}
+        self._ep_mesh = None
         self._collect = controller is not None and cfg.is_moe
         self._step = self._get_step(self._collect)
         # right-padded prefill is exact only when no sublayer carries
@@ -179,6 +200,17 @@ class ServingEngine:
                 T.decode_step, self.cfg, window=self.window,
                 collect=collect))
         return self._steps[collect]
+
+    def _get_ep_step(self, collect: bool, ctx):
+        """Jitted decode step with MoE sublayers routed through the EP
+        slot data plane. `ctx` (static) is closed over; only the slot
+        tables/weights are traced, so plan changes never recompile."""
+        key = (collect, ctx)
+        if key not in self._ep_steps:
+            self._ep_steps[key] = jax.jit(partial(
+                T.decode_step, self.cfg, window=self.window,
+                collect=collect, ep_ctx=ctx))
+        return self._ep_steps[key]
 
     def new_cache(self, batch_size: int):
         return T.init_cache(self.cfg, self.params, batch_size, self.max_len)
@@ -279,8 +311,22 @@ class ServingEngine:
                 "encoder-decoder decode does not support (scalar-only "
                 "positional offsets) — use the fixed-batch prefill/decode "
                 "API for enc-dec models")
+        runtime = None
+        if self.expert_runtime == "on":
+            if control is None:
+                raise ValueError(
+                    "expert_runtime='on' needs a session control plane — "
+                    "the runtime executes ITS replica plans")
+            from repro.serving.expert_runtime import ExpertRuntime
+            if self._ep_mesh is None:
+                self._ep_mesh = jax.make_mesh((1, 1, 1),
+                                              ("data", "ep", "tp"))
+            runtime = ExpertRuntime.for_control(
+                self.cfg, self.params, control, mesh=self._ep_mesh)
+            runtime.bootstrap(control)
         self._session = _Session(self.cfg, self.params, num_slots,
-                                 self.max_len, eos_id, control, time_scale)
+                                 self.max_len, eos_id, control, time_scale,
+                                 runtime=runtime)
 
     def close(self) -> None:
         self._session = None
@@ -339,9 +385,12 @@ class ServingEngine:
                 rid=req.rid)
             dt = None
             if sess.control is not None and "expert_load" in metrics:
-                dt = sess.control.step(
+                out = sess.control.step(
                     sess.now, self._gate_inputs(metrics),
-                    metrics["expert_load"], token_mask=mask).latency_s
+                    metrics["expert_load"], token_mask=mask)
+                dt = out.latency_s
+                if sess.runtime is not None:
+                    sess.runtime.apply(sess.now, out.events)
             self._drive_controller(metrics, token_mask=mask)
             if dt is None:
                 dt = time.perf_counter() - t0
@@ -361,10 +410,19 @@ class ServingEngine:
         # then one jitted sampling call over every slot
         t0 = time.perf_counter()
         lengths, active = kv.step_lengths()
-        step_fn = self._get_step(collect)
         batch = {"tokens": jnp.asarray(sess.cur[:, None]), "active": active}
-        logits, kv.cache, metrics = step_fn(
-            self.params, batch, kv.cache, lengths)
+        if sess.runtime is not None:
+            # EP slot data plane: the MoE layers execute the control
+            # plane's plans through the runtime's live slot
+            # tables/weights (re-programmed each iteration, no recompile)
+            step_fn = self._get_ep_step(collect, sess.runtime.ctx)
+            logits, kv.cache, metrics = step_fn(
+                self.params, batch, kv.cache, lengths,
+                sess.runtime.ep_state())
+        else:
+            step_fn = self._get_step(collect)
+            logits, kv.cache, metrics = step_fn(
+                self.params, batch, kv.cache, lengths)
         if any(sess.temp[s] > 0 for s in sched.running):
             toks = np.asarray(T.sample_tokens(
                 logits[:, -1], jnp.asarray(sess.temp),
@@ -374,9 +432,12 @@ class ServingEngine:
             toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         dt = None
         if sess.control is not None and "expert_load" in metrics:
-            dt = sess.control.step(
+            out = sess.control.step(
                 sess.now, self._gate_inputs(metrics),
-                metrics["expert_load"], token_mask=active).latency_s
+                metrics["expert_load"], token_mask=active)
+            dt = out.latency_s
+            if sess.runtime is not None:
+                sess.runtime.apply(sess.now, out.events)
         self._drive_controller(metrics, token_mask=active)
         if dt is None:
             dt = time.perf_counter() - t0
@@ -434,7 +495,8 @@ class ServingEngine:
             cancelled=len(sess.sched.cancelled),
             mean_batch_occupancy=float(np.mean(sess.occupancy))
             if sess.occupancy else 0.0,
-            wall_s=time.perf_counter() - sess.wall0, control=sess.control)
+            wall_s=time.perf_counter() - sess.wall0, control=sess.control,
+            runtime=sess.runtime, clock_s=sess.now)
 
     # ------------------------------------------------------ trace replay
 

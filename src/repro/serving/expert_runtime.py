@@ -1,0 +1,404 @@
+"""Serverless expert runtime — the device-resident slot state machine
+that EXECUTES the control plane's replica plans in the serving hot path
+(paper §2.4/§5; closes the plan→execution gap).
+
+The control plane (``repro.core.control.ControlPlane.step``) decides,
+per iteration and per MoE layer, how many replicas each expert function
+gets and where they live. Until now those plans were only *metered*
+analytically — the data plane decoded through a static expert layout.
+``ExpertRuntime`` owns the per-device slot-resident expert weight
+buffers the jitted EP dispatch (``distributed.ep.moe_ep_layer``)
+consumes, and applies each ``IterationOutcome`` as a **diff**:
+
+  * function locality — a warm (expert, device) replica keeps its slot;
+    it is never re-copied. An unchanged plan moves zero bytes.
+  * minimal transfers — only replicas with no live instance cost a slot
+    weight copy; the copy count equals the plan's diff against current
+    residency (``LayerPlan.diff_size``).
+  * cold-start hiding — a new replica whose modeled cold start fits
+    inside the predictor's lead time is *prewarmed* (serves this
+    iteration); otherwise it is *cold* and serves from the NEXT
+    iteration via the control plane's warm-subset ``served`` plan
+    (asynchronous scaling, paper §5). Weights materialise either way —
+    the copy IS the cold start.
+  * keep-alive eviction — instances idle past ``keep_alive`` free their
+    slot and are billed for their actual residency, exactly like the
+    analytic ``ServerlessExpertPool`` they are validated against.
+
+Metering: cold/warm/prewarmed counts and GB-seconds of residency follow
+the SAME classification the analytic pool applies (same plans, same
+timestamps, same lead/exec times ⇒ equal counts — a tested invariant),
+while ``bytes_moved`` counts the weight bytes actually written into
+slot banks on this host.
+
+Slot geometry: the plan's `num_devices` logical devices each own
+`slots_per_device` logical slots, flattened to ``total_slots`` physical
+slots spread over the EP mesh ranks (on a 1-device CPU mesh every slot
+lives on rank 0 — the same code places slot s on rank
+``s // (total_slots // ep)`` on a pod). A replica planned onto a full
+device spills to the ring-nearest device with a free slot, mirroring
+``plan_to_tables``.
+"""
+from __future__ import annotations
+
+import math
+import warnings
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import serverless as SL
+from repro.core.control import (MOELESS_EXEC_TIME, PlanEvent,
+                                default_slots_per_device)
+from repro.core.costmodel import V5E, Hardware, derive_coeffs
+from repro.distributed.ep import EPContext
+from repro.models import transformer as T
+
+
+@dataclass
+class RuntimeStats:
+    """Cumulative meters of the executing runtime (all layers)."""
+    cold_starts: int = 0
+    warm_starts: int = 0
+    prewarmed: int = 0
+    transfers: int = 0             # slot weight copies actually performed
+    bytes_moved: float = 0.0       # actual bytes written into slot banks
+    evictions: int = 0             # keep-alive expiries
+    instance_seconds_gb: float = 0.0   # GB-seconds of actual residency
+
+    def counts(self) -> tuple[int, int, int]:
+        return self.cold_starts, self.warm_starts, self.prewarmed
+
+
+@dataclass
+class ApplyReport:
+    """What ONE ``apply`` call did to the slot state."""
+    transfers: int = 0
+    bytes_moved: float = 0.0
+    cold_starts: int = 0
+    warm_starts: int = 0
+    prewarmed: int = 0
+    evictions: int = 0
+    per_layer_transfers: list = field(default_factory=list)
+
+
+@dataclass
+class _SlotInstance:
+    """One live expert function instance, resident in one slot."""
+    slot: int
+    born: float
+    last_used: float
+
+
+class ExpertRuntime:
+    """Owns the slot-resident expert weights for every MoE layer of one
+    model and executes the control plane's plans as slot diffs.
+
+    Lifecycle:  ``bootstrap(control)`` installs the balancer's prewarm
+    plans (if any), ``apply(t, events)`` executes one iteration's
+    ``PlanEvent`` list, ``ep_state()`` exports the live tables/weights
+    for the jitted decode step, ``finalize(now)`` settles residency
+    billing.
+    """
+
+    def __init__(self, cfg, params, *, num_devices: int,
+                 slots_per_device: int = 0, mesh=None,
+                 keep_alive: float = 60.0, hw: Hardware = V5E,
+                 coeffs=None):
+        assert cfg.is_moe, "expert runtime serves MoE models"
+        if cfg.act != "swiglu":
+            raise NotImplementedError(
+                "EP slot banks hold swiglu experts (w_gate/w_up/w_down); "
+                f"act={cfg.act!r} is not wired into the slot data plane")
+        self.cfg = cfg
+        self.keep_alive = keep_alive
+        self.hw = hw
+        self.coeffs = coeffs if coeffs is not None else derive_coeffs(cfg)
+        self._cold_start_s = SL.cold_start_latency(self.coeffs.expert_bytes,
+                                                   hw)
+
+        pattern = T.layer_pattern(cfg)
+        self.moe_positions = [j for j, sub in enumerate(pattern)
+                              if sub.ffn == "moe"]
+        self.pattern_len = len(pattern)
+        self.mpp = len(self.moe_positions)       # MoE sublayers per period
+        self.periods = cfg.num_layers // len(pattern)
+        self.n_layers = self.periods * self.mpp  # == ControlPlane.n_layers
+
+        e = cfg.moe.num_experts
+        self.num_experts = e
+        self.num_devices = num_devices
+        # logical slots per modeled device — same default the
+        # MoElessController uses for its slot-table export
+        self.slots_per_device = slots_per_device \
+            or default_slots_per_device(e, num_devices)
+        self.total_slots = num_devices * self.slots_per_device
+
+        if mesh is None:
+            mesh = jax.make_mesh((1, 1, 1), ("data", "ep", "tp"))
+        self.mesh = mesh
+        self.ep = mesh.shape["ep"]
+        if self.total_slots % self.ep:
+            raise ValueError(
+                f"{self.total_slots} slots do not split over "
+                f"{self.ep} EP ranks")
+        self.ctx = EPContext(mesh=mesh,
+                             slots_per_device=self.total_slots // self.ep,
+                             capacity_factor=cfg.moe.capacity_factor)
+
+        # padded per-expert weight banks, ONE pad at construction
+        # (satellite fix: materialisation must not re-pad per call):
+        # leaves (P, E+1, D, F) / (P, E+1, F, D)
+        self.padded = {}
+        self.banks = {}
+        self._slot_row_bytes = {}
+        for j in self.moe_positions:
+            bank = params["layers"][j]["moe"]["experts"]
+            self.padded[j] = {
+                k: jnp.concatenate([w, jnp.zeros_like(w[:, :1])], axis=1)
+                for k, w in bank.items()}
+            self.banks[j] = {
+                k: jnp.zeros((self.periods, self.total_slots) + w.shape[2:],
+                             w.dtype)
+                for k, w in bank.items()}
+            self._slot_row_bytes[j] = float(sum(
+                int(np.prod(w.shape[2:])) * w.dtype.itemsize
+                for w in bank.values()))
+
+        # host-side slot state machine, per MoE layer l = p*mpp + m
+        lm, s = self.n_layers, self.total_slots
+        self.slot_expert = np.full((lm, s), e, np.int32)   # E => empty
+        self.instances: list[dict] = [dict() for _ in range(lm)]
+        # routing tables exported to the jitted step (0-padded: padding
+        # is never selected because r_idx < nrep)
+        self.table_slots = np.zeros((lm, e, s), np.int32)
+        self.table_nrep = np.ones((lm, e), np.int32)
+        self._have_tables = False
+        self.stats = RuntimeStats()
+        self.iterations = 0
+        # jit caches one program per (position shapes, bucket size); the
+        # power-of-two bucketing in _flush bounds how many that is
+        self._update_fn = jax.jit(_scatter_slots, donate_argnums=(0,))
+
+    # ------------------------------------------------------ construction
+
+    @classmethod
+    def for_control(cls, cfg, params, control, *, mesh=None,
+                    keep_alive: float | None = None):
+        """Runtime sized to a ``ControlPlane``: same modeled device
+        count, same slot caps, same cost coefficients and keep-alive —
+        the preconditions for count/billing parity with the analytic
+        pool."""
+        if keep_alive is None:
+            keep_alive = getattr(control.bal, "keep_alive", 60.0)
+        sd = getattr(control, "slots_per_device", 0) \
+            or getattr(control.bal, "max_replicas_per_device", 0)
+        return cls(cfg, params, num_devices=control.num_devices,
+                   slots_per_device=sd, mesh=mesh, keep_alive=keep_alive,
+                   coeffs=control.coeffs)
+
+    def bootstrap(self, control=None, t: float = 0.0) -> ApplyReport | None:
+        """Install the balancer's deployment-time prewarm plans (paper
+        §5) so the runtime's residency starts where the analytic pool's
+        did; with no prewarmed balancer the slot banks start empty and
+        the first ``apply`` performs the initial weight load."""
+        prev = getattr(getattr(control, "bal", None), "prev", None)
+        if not prev:
+            return None
+        events = [PlanEvent(plan=prev[l], served=prev[l],
+                            lead_time=math.inf,
+                            exec_time=MOELESS_EXEC_TIME, serverless=True)
+                  for l in range(self.n_layers)]
+        return self.apply(t, events)
+
+    # -------------------------------------------------------- lifecycle
+
+    def cold_start_latency(self) -> float:
+        return self._cold_start_s
+
+    def _bill(self, inst: _SlotInstance, until: float) -> None:
+        alive = until - inst.born
+        self.stats.instance_seconds_gb += \
+            alive * self.coeffs.expert_bytes / 1e9
+
+    def _reap(self, layer: int, now: float) -> None:
+        inst = self.instances[layer]
+        for key in [k for k, i in inst.items()
+                    if now - i.last_used > self.keep_alive]:
+            i = inst.pop(key)
+            self._bill(i, i.last_used + self.keep_alive)
+            self.slot_expert[layer, i.slot] = self.num_experts
+            self.stats.evictions += 1
+
+    def _alloc(self, layer: int, g: int) -> int:
+        """Lowest free slot on logical device g, spilling to the
+        ring-nearest device with capacity (mirrors ``plan_to_tables``)."""
+        sd, gdev = self.slots_per_device, self.num_devices
+        row = self.slot_expert[layer]
+
+        def free_on(gg: int) -> int:
+            base = gg * sd
+            for s in range(base, base + sd):
+                if row[s] == self.num_experts:
+                    return s
+            return -1
+
+        g = g % gdev
+        slot = free_on(g)
+        if slot >= 0:
+            return slot
+        candidates = [gg for gg in range(gdev) if free_on(gg) >= 0]
+        if not candidates:
+            raise RuntimeError(
+                f"layer {layer}: no free slot for a replica on device {g} "
+                f"({self.total_slots} slots all resident)")
+        near = min(candidates,
+                   key=lambda gg: min((gg - g) % gdev, (g - gg) % gdev))
+        warnings.warn(
+            f"expert runtime: layer {layer} replica overflowed device {g} "
+            f"(cap {sd}/device) and spilled to device {near}",
+            RuntimeWarning, stacklevel=3)
+        return free_on(near)
+
+    # ------------------------------------------------------------ apply
+
+    def apply(self, t: float, events: list) -> ApplyReport:
+        """Execute one iteration's planning decisions: reap expired
+        instances, diff every layer's FULL plan against residency,
+        materialise ONLY the changed slots, and rebuild the routing
+        tables from the warm-subset ``served`` plans."""
+        if len(events) != self.n_layers:
+            raise ValueError(f"{len(events)} plan events for "
+                             f"{self.n_layers} MoE layers")
+        rep = ApplyReport()
+        evict0 = self.stats.evictions
+        updates = {j: ([], [], []) for j in self.moe_positions}
+        for layer, ev in enumerate(events):
+            self._reap(layer, t)
+            inst = self.instances[layer]
+            if not ev.serverless:
+                # serverful semantics: the plan IS the deployment —
+                # replicas absent from it release their slot now
+                # (keep-alive would otherwise pin every historical
+                # placement of a periodic rebalancer forever)
+                desired = set(ev.plan.iter_replicas())
+                for key in [k for k in inst if k not in desired]:
+                    i = inst.pop(key)
+                    self._bill(i, t)
+                    self.slot_expert[layer, i.slot] = self.num_experts
+                    self.stats.evictions += 1
+            n_transfer = 0
+            for key in ev.plan.iter_replicas():
+                if key in inst:
+                    inst[key].last_used = t + ev.lead_time + ev.exec_time
+                    self.stats.warm_starts += 1
+                    rep.warm_starts += 1
+                    continue
+                e, g = key
+                slot = self._alloc(layer, g)
+                self.slot_expert[layer, slot] = e
+                inst[key] = _SlotInstance(
+                    slot=slot, born=t,
+                    last_used=t + ev.lead_time + ev.exec_time)
+                if self._cold_start_s <= ev.lead_time:
+                    self.stats.prewarmed += 1
+                    rep.prewarmed += 1
+                else:
+                    self.stats.cold_starts += 1
+                    rep.cold_starts += 1
+                n_transfer += 1
+                p, j = layer // self.mpp, \
+                    self.moe_positions[layer % self.mpp]
+                ps, ss, es = updates[j]
+                ps.append(p)
+                ss.append(slot)
+                es.append(e)
+                self.stats.bytes_moved += self._slot_row_bytes[j]
+                rep.bytes_moved += self._slot_row_bytes[j]
+            self.stats.transfers += n_transfer
+            rep.transfers += n_transfer
+            rep.per_layer_transfers.append(n_transfer)
+            self._build_tables(layer, ev.served)
+        rep.evictions = self.stats.evictions - evict0
+        self._flush(updates)
+        self._have_tables = True
+        self.iterations += 1
+        return rep
+
+    def _build_tables(self, layer: int, served) -> None:
+        inst = self.instances[layer]
+        slots = self.table_slots[layer]
+        nrep = self.table_nrep[layer]
+        slots[:] = 0
+        for e in range(self.num_experts):
+            placement = served.placement[e]
+            nrep[e] = max(1, len(placement))
+            for r, g in enumerate(placement):
+                slots[e, r] = inst[(e, int(g))].slot
+
+    def _flush(self, updates: dict) -> None:
+        """Write the changed slots' weights into the device banks — one
+        donated jitted scatter per pattern position, sized to a
+        power-of-two bucket so a steady stream of small diffs reuses a
+        handful of compiled update programs."""
+        for j, (ps, ss, es) in updates.items():
+            k = len(ps)
+            if k == 0:
+                continue
+            bucket = 1 << (k - 1).bit_length()
+            ps = ps + [ps[-1]] * (bucket - k)
+            ss = ss + [ss[-1]] * (bucket - k)
+            es = es + [es[-1]] * (bucket - k)
+            self.banks[j] = self._update_fn(
+                self.banks[j], self.padded[j],
+                jnp.asarray(ps, jnp.int32),
+                jnp.asarray(ss, jnp.int32),
+                jnp.asarray(es, jnp.int32))
+
+    # ------------------------------------------------------------ export
+
+    def ep_state(self) -> list:
+        """The per-layer slot tables + weight banks as the decode step's
+        ``ep_state`` pytree: one entry per sublayer pattern position
+        (None for non-MoE positions), leaves stacked over periods."""
+        if not self._have_tables:
+            raise RuntimeError("expert runtime has no tables yet — "
+                               "bootstrap() or apply() a plan first")
+        state = [None] * self.pattern_len
+        for m, j in enumerate(self.moe_positions):
+            state[j] = {
+                "expert_slots": jnp.asarray(self.table_slots[m::self.mpp]),
+                "nrep": jnp.asarray(self.table_nrep[m::self.mpp]),
+                **self.banks[j],
+            }
+        return state
+
+    # ---------------------------------------------------------- metering
+
+    def resident_replicas(self) -> int:
+        return sum(len(d) for d in self.instances)
+
+    def residency_set(self, layer: int) -> set:
+        """Live (expert, device) instances of one layer."""
+        return set(self.instances[layer])
+
+    def finalize(self, now: float) -> RuntimeStats:
+        """Settle residency billing (idempotent — instances are released
+        as they are billed), mirroring ``ServerlessExpertPool.finalize``."""
+        for layer in range(self.n_layers):
+            inst = self.instances[layer]
+            for key, i in list(inst.items()):
+                self._bill(i, min(now, i.last_used + self.keep_alive))
+                self.slot_expert[layer, i.slot] = self.num_experts
+                del inst[key]
+        return self.stats
+
+
+def _scatter_slots(banks, padded, p_idx, s_idx, e_idx):
+    """banks[k] (P, S, ...), padded[k] (P, E+1, ...): write the (K,)
+    changed slots' expert rows. Runs donated under jit — only the
+    touched rows move."""
+    return {k: b.at[p_idx, s_idx].set(padded[k][p_idx, e_idx])
+            for k, b in banks.items()}

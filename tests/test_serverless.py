@@ -1,6 +1,6 @@
 """Serverless expert-function lifecycle: cold/warm/prewarm transitions,
 keep-alive reaping, metering."""
-import numpy as np
+import pytest
 
 from repro.core.plan import static_plan
 from repro.core.serverless import ServerlessExpertPool
@@ -47,3 +47,37 @@ def test_metering_accumulates():
     pool.commit(plan, now=0.0, exec_time=0.5, lead_time=0.0)
     stats = pool.finalize(now=10.0)
     assert stats.instance_seconds_gb > 0
+
+
+def test_finalize_idempotent():
+    """finalize() settles every live instance exactly once — calling it
+    again (even later) must not bill anything twice. The executing
+    ExpertRuntime is validated against this pool, so its billing
+    semantics have to be pinned down."""
+    pool = mk_pool(keep_alive=1.0)
+    pool.commit(static_plan(2, 2), now=0.0, exec_time=0.5, lead_time=0.0)
+    gb1 = pool.finalize(now=10.0).instance_seconds_gb
+    assert gb1 > 0
+    assert pool.finalize(now=10.0).instance_seconds_gb == gb1
+    assert pool.finalize(now=99.0).instance_seconds_gb == gb1
+    assert pool.instances == {}
+
+
+def test_reap_then_recreate_billing():
+    """An instance reaped at keep-alive expiry is billed for its full
+    residency (born -> last_used + keep_alive); re-creating the same
+    (expert, device) later opens a NEW billing interval — the two
+    intervals sum, the idle gap between them is free."""
+    pool = ServerlessExpertPool(expert_bytes=1e9, keep_alive=1.0)
+    plan = static_plan(1, 1)
+    # interval 1: born t=0, last_used 0, billed until 0 + keep_alive
+    pool.commit(plan, now=0.0, exec_time=0.0, lead_time=0.0)
+    assert pool.stats.cold_starts == 1
+    # t=10: idle since 0 -> reaped (1 GB * 1 s), then re-created cold
+    pool.commit(plan, now=10.0, exec_time=0.0, lead_time=0.0)
+    assert pool.stats.cold_starts == 2          # recreation is cold again
+    assert pool.stats.warm_starts == 0
+    assert pool.stats.instance_seconds_gb == pytest.approx(1.0)
+    # interval 2: born t=10, capped by finalize at t=10.5
+    stats = pool.finalize(now=10.5)
+    assert stats.instance_seconds_gb == pytest.approx(1.5)
