@@ -72,9 +72,10 @@ def main(slots: int = 8, gen: int = 32, prompt_len: int = 16,
     ctl_s = time.perf_counter() - t0
 
     # batched + control plane + EXECUTING expert runtime: the plans are
-    # applied as slot diffs and the MoE layers decode through the EP
-    # slot data plane; cold/warm/prewarm and bytes moved come from the
-    # runtime's own meters
+    # applied as slot diffs and BOTH phases' MoE layers (prefill and
+    # decode) run through the EP slot data plane with drop-equivalent
+    # capacity semantics; cold/warm/prewarm and bytes moved come from
+    # the runtime's own meters
     engine = ServingEngine(cfg, params, max_len=max_len,
                            expert_runtime="on")
     engine.serve(mk_reqs()[:1], num_slots=slots,
@@ -109,7 +110,9 @@ def main(slots: int = 8, gen: int = 32, prompt_len: int = 16,
          f"(cold/warm/prewarm {rst.cold_starts}/{rst.warm_starts}/"
          f"{rst.prewarmed}, {rst.transfers} slot transfers, "
          f"{rst.bytes_moved / 1e6:.1f}MB moved, "
-         f"{rst.instance_seconds_gb:.3g} GB-s)"),
+         f"{rst.instance_seconds_gb:.3g} GB-s, "
+         f"{rst.by_phase.get('prefill', {}).get('iterations', 0)} EP "
+         f"prefills, {res_r.dropped_tokens:.0f} dropped)"),
     ]
 
 

@@ -55,10 +55,10 @@ def main():
                 (np.asarray(prev_se)
                  != np.asarray(tables["slot_expert"])).sum())
             prev_se = tables["slot_expert"]
-            y, loads = EP.moe_ep_layer(
+            y, m = EP.moe_ep_layer(
                 x, rw, slot_w, tables, mesh=mesh, num_experts=E,
-                top_k=TOPK, slots_per_device=4)
-            loads = np.asarray(loads, np.float64)
+                top_k=TOPK, slots_per_device=4, capacity_factor=2.0)
+            loads = np.asarray(m["expert_load"], np.float64)
             # per-EP-rank load under the current plan
             rank_load = plan.per_device_load(loads)
             print(f"iter {it}: expert loads={loads.astype(int)} "

@@ -107,11 +107,13 @@ def run_real_model(args):
             rt_info = ""
             if res.runtime is not None:
                 st = res.runtime.finalize(res.clock_s)
+                pf = st.by_phase.get("prefill", {})
                 rt_info = (f", runtime c/w/p "
                            f"{st.cold_starts}/{st.warm_starts}/"
                            f"{st.prewarmed}, "
                            f"{st.bytes_moved / 1e6:.1f}MB moved, "
-                           f"{st.instance_seconds_gb:.3g} GB-s resident")
+                           f"{st.instance_seconds_gb:.3g} GB-s resident, "
+                           f"{pf.get('iterations', 0)} EP prefills")
             print(f"{strategy:12s} {len(res.records):5d} "
                   f"{res.iterations:6d} {res.mean_batch_occupancy:5.1f} "
                   f"{s['ttft']['p50']*1e3:8.2f}/{s['ttft']['p99']*1e3:8.2f} "
@@ -119,7 +121,8 @@ def run_real_model(args):
                   f"{s['e2e']['p50']*1e3:8.1f}/{s['e2e']['p99']*1e3:8.1f} "
                   f"{control.mean_layer_ms():9.4f} {control.cost:9.3g} "
                   f"[{res.wall_s:.1f}s wall, "
-                  f"{control.host_transfers} host syncs{rt_info}]")
+                  f"{control.host_transfers} host syncs, "
+                  f"{res.dropped_tokens:.0f} dropped{rt_info}]")
         if clip is not None and clip.any:
             print(f"note: trace clipped to fit max_len={args.max_len} "
                   f"slots ({clip})")
@@ -158,8 +161,10 @@ def main():
                     help="execute the control plane's replica plans: "
                          "'on' applies each iteration's plans as slot "
                          "diffs to device-resident expert weight banks "
-                         "and decodes the MoE layers through the EP "
-                         "slot data plane (real-model path only)")
+                         "and runs BOTH prefill and decode MoE layers "
+                         "through the EP slot data plane, with "
+                         "drop-equivalent capacity semantics to the "
+                         "dispatch path (real-model path only)")
     ap.add_argument("--time-scale", type=float, default=5000.0,
                     help="serving-clock multiplier for the real-model "
                          "path: smoke-model modeled latencies are ~1000x "

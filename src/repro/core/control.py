@@ -4,7 +4,8 @@ Every consumer — the real-model ``ServingEngine``, the analytic
 ``core.simulator``, and ``benchmarks/serving_bench.py`` — drives the
 same entry point:
 
-    ControlPlane.step(t, gate_inputs, actual_loads, token_mask)
+    ControlPlane.step(t, gate_inputs, actual_loads, token_mask,
+                      dropped=, phase=)
         -> IterationOutcome(latency_s, cost, plans)
 
 One ``step`` call plans EVERY MoE layer for one serving iteration under
@@ -97,22 +98,27 @@ def layer_iteration_cost(bal, plan, t_fwd: float, *, coeffs,
         + CM.iteration_cost(coeffs.t_misc, m_misc)
 
 
-def _fetch_loads(predictor, top_k, gate_inputs, actual_loads, token_mask):
-    """(predicted, actual) per-layer loads on host in ONE device->host
-    transfer. With a predictor the batched gate-replica call runs on
-    device and both arrays come back in a single ``jax.device_get``;
-    without one the actual loads serve as the prediction."""
+def _fetch_loads(predictor, top_k, gate_inputs, actual_loads, token_mask,
+                 dropped=None):
+    """(predicted, actual, dropped) per-layer loads on host in ONE
+    device->host transfer. With a predictor the batched gate-replica
+    call runs on device and all arrays come back in a single
+    ``jax.device_get``; without one the actual loads serve as the
+    prediction. `dropped` (the data plane's per-layer dropped-token
+    counts, or None) rides the same sync — metering drops must not add
+    a second host round-trip to the iteration."""
     import jax
 
     if predictor is not None and gate_inputs is not None:
         dev = predictor.predict_loads_all(gate_inputs, actual_loads, top_k,
                                           token_mask=token_mask)
-        pred, acts = jax.device_get((dev, actual_loads))
+        pred, acts, drp = jax.device_get((dev, actual_loads, dropped))
     else:
-        acts = jax.device_get(actual_loads)
+        acts, drp = jax.device_get((actual_loads, dropped))
         pred = acts
     return (np.maximum(np.asarray(pred, np.float64), 0),
-            np.asarray(acts, np.float64))
+            np.asarray(acts, np.float64),
+            None if drp is None else np.asarray(drp, np.float64))
 
 
 @dataclass(frozen=True)
@@ -212,35 +218,61 @@ class ControlPlane:
         self.cost = 0.0
         self.host_transfers = 0    # device->host syncs (<=1 per iteration)
         self.iterations = 0
+        # phase meters: prefill and decode iterations drive the SAME
+        # step with the same token_mask semantics (a (N,) per-token mask
+        # over the gate inputs — padded prompt tail at prefill, inactive
+        # KV slots at decode); counted separately so drop rates and
+        # latencies can be attributed per phase
+        self.phase_iterations: dict[str, int] = {}
+        self.dropped_tokens = 0.0  # data-plane drops, cumulative
+        self.phase_dropped: dict[str, float] = {}
         self.last_plans: list = []
         if prewarm and hasattr(self.bal, "prewarm"):
             self.bal.prewarm(np.full(cfg.moe.num_experts, 1.0))
 
     # ----------------------------------------------------------- loads
 
-    def _loads(self, gate_inputs, actual_loads, token_mask):
-        """(predicted, actual) as (Lm, E) float64 host arrays."""
+    def _loads(self, gate_inputs, actual_loads, token_mask, dropped=None):
+        """(predicted, actual, dropped) as float64 host arrays (dropped
+        may be None)."""
         if self.error_model is not None:
             acts = np.asarray(actual_loads, np.float64)
             pred = np.stack([
                 self.error_model.predict(self._rng, acts[l], l,
                                          self.prediction_distance)
                 for l in range(acts.shape[0])])
-            return np.maximum(pred, 0), acts
-        pred, acts = _fetch_loads(self.predictor, self.cfg.moe.top_k,
-                                  gate_inputs, actual_loads, token_mask)
+            drp = None if dropped is None \
+                else np.asarray(dropped, np.float64)
+            return np.maximum(pred, 0), acts, drp
+        pred, acts, drp = _fetch_loads(self.predictor, self.cfg.moe.top_k,
+                                       gate_inputs, actual_loads,
+                                       token_mask, dropped)
         self.host_transfers += 1
-        return pred, acts
+        return pred, acts, drp
 
     # ------------------------------------------------------------ step
 
     def step(self, t: float, gate_inputs, actual_loads,
-             token_mask=None) -> IterationOutcome:
+             token_mask=None, *, dropped=None,
+             phase: str = "decode") -> IterationOutcome:
         """One serving iteration: plan + meter every MoE layer. Returns
         the iteration's outcome; cumulative meters stay on the instance
         (``layer_latency``, ``iter_latency``, ``cost``,
-        ``host_transfers``)."""
-        pred, acts = self._loads(gate_inputs, actual_loads, token_mask)
+        ``host_transfers``). `phase` tags the iteration ('prefill' or
+        'decode' — both drive this one entry point with identical
+        token_mask semantics); `dropped` (Lm,) is the data plane's
+        per-layer dropped-token count, fetched inside the iteration's
+        single host sync and accumulated into ``dropped_tokens`` /
+        ``phase_dropped``."""
+        pred, acts, drp = self._loads(gate_inputs, actual_loads,
+                                      token_mask, dropped)
+        self.phase_iterations[phase] = \
+            self.phase_iterations.get(phase, 0) + 1
+        if drp is not None:
+            d = float(np.sum(drp))
+            self.dropped_tokens += d
+            self.phase_dropped[phase] = \
+                self.phase_dropped.get(phase, 0.0) + d
         total = 0.0
         cost0 = self.cost
         serverless = bool(getattr(self.bal, "serverless", False))

@@ -174,20 +174,42 @@ def materialise_slots(expert_weights, slot_expert, mesh, *, padded=None,
 
 def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
                  top_k: int, slots_per_device: int,
-                 capacity_factor: float = 2.0, act: str = "swiglu",
+                 capacity_factor: float, act: str = "swiglu",
                  impl: str = "auto", token_mask=None):
     """x: (B, S, D) sharded P('data', 'ep', None) (replicated over 'tp').
     slot_w: dict of slot banks from materialise_slots.
     `impl` selects the grouped-FFN kernel backend for the per-rank slot
     compute (kernels.ops: auto | pallas | pallas_interpret | ref).
     `token_mask` (B, S) excludes tokens (inactive continuous-batching
-    slots) from the expert-load metric; compute is unaffected.
-    Returns y sharded like x, plus per-expert load metrics."""
+    slots) from the expert-load and dropped metrics; compute is
+    unaffected.
+
+    Capacity / drop semantics are DROP-EQUIVALENT to
+    ``models.moe.dispatch_moe``: every replica slot gets the same
+    per-expert capacity ``ceil(capacity_factor * top_k * T / E)`` (T =
+    tokens on this shard — the analogue of one dispatch group per
+    shard; equivalence is exact when the dispatch path runs one group
+    per shard, the serving configuration — extra dispatch groups
+    (> 2048 tokens, ``transformer._moe_groups``) divide dispatch
+    capacity per group and the counts can diverge), assignments take
+    capacity in the same GShard priority order (lower k-slots first,
+    then token order), and overflow is COUNTED, not silently zeroed.
+    With single-replica plans the kept token set is identical to the
+    capacity dispatch; extra replicas only ADD capacity, so a token the
+    dispatch path keeps is always kept here.
+    `capacity_factor` has no default on purpose — thread
+    ``cfg.moe.capacity_factor`` so both data planes share one value.
+
+    Returns (y, metrics) with y sharded like x and metrics in the
+    ``dispatch_moe`` shape: ``expert_load`` (E,) and ``dropped``
+    (scalars psum'd over ('data','ep')), plus ``aux_loss`` (always 0 —
+    the serving hot path does not pay for the full-softmax probs)."""
     # lazy import: consumers of the slot-table helpers never pull in
     # pallas-tpu (see kernels._compat)
     from repro.kernels import ops as KOPS
     ep = mesh.shape["ep"]
     sd_ = slots_per_device
+    n_slots = ep * sd_
     impl = KOPS.resolve_impl(impl)   # fail fast on unknown backends
     # pallas_call has no replication rule, so the Pallas backends need
     # the shard_map checker off; 'ref' keeps the default trace-time check
@@ -203,73 +225,101 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
         top_w, top_i = jax.lax.top_k(logits.astype(jnp.float32), top_k)
         top_w = jax.nn.softmax(top_w, -1)
 
-        # replica choice: round robin over the expert's replicas (step 4)
+        # replica choice: round robin over the expert's replicas (step
+        # 4). A plan can leave an expert with zero replicas (scaler edge
+        # case): guard the modulus against mod-by-zero, route the
+        # assignment to slot 0 so indexing stays in bounds, and mask it
+        # out below (it contributes nothing and is counted as dropped).
         tok = jnp.arange(t, dtype=jnp.int32)[:, None]
+        nrep_t = nrep[top_i]                                 # (t, k)
         r_idx = jnp.mod(tok + jnp.arange(top_k, dtype=jnp.int32),
-                        nrep[top_i])
+                        jnp.maximum(nrep_t, 1))
         slot = expert_slots[top_i, r_idx]                    # (t, k)
-        dest = slot // sd_
+        routable = (nrep_t > 0) & (slot >= 0)
+        slot = jnp.where(routable, slot, 0)
 
-        # pack send buffers by destination rank
-        cap = max(1, int(capacity_factor * t * top_k / ep))
-        fdest = dest.reshape(-1)
-        forder = jnp.argsort(fdest)
-        sdst = fdest[forder]
+        # drop-equivalent capacity: dispatch_moe's per-expert formula,
+        # applied per SLOT (each replica carries the full per-expert
+        # capacity, so replication only raises headroom)
+        cap = max(1, math.ceil(capacity_factor * top_k * t / num_experts))
+
+        # GShard priority order: flatten k-major (all k=0 assignments in
+        # token order, then k=1, ...) so position-in-slot matches
+        # dispatch_moe's cumsum positions and both paths drop the SAME
+        # assignments. Unroutable assignments sort last (sentinel slot).
+        fslot = slot.T.reshape(-1)                           # (k*t,)
+        skey = jnp.where(routable.T.reshape(-1), fslot, n_slots)
+        ftok = jnp.tile(jnp.arange(t, dtype=jnp.int32), top_k)
+        forder = jnp.argsort(skey)                           # stable
+        ssl = skey[forder]
+        stok = ftok[forder]
+        sw = top_w.T.reshape(-1)[forder]
+        counts = jnp.bincount(ssl, length=n_slots + 1)[:n_slots]
         starts = jnp.concatenate(
             [jnp.zeros(1, jnp.int32),
-             jnp.cumsum(jnp.bincount(sdst, length=ep)
-                        ).astype(jnp.int32)[:-1]])
-        pos = jnp.arange(t * top_k, dtype=jnp.int32) - starts[sdst]
-        keep = pos < cap
-        ftok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)[forder]
-        fslot = slot.reshape(-1)[forder]
-        send_x = jnp.zeros((ep, cap, d), x_loc.dtype)
-        send_s = jnp.full((ep, cap), ep * sd_, jnp.int32)
-        cpos = jnp.clip(pos, 0, cap - 1)
-        send_x = send_x.at[sdst, cpos].set(
-            jnp.where(keep[:, None], xf[ftok], 0.0))
-        send_s = send_s.at[sdst, cpos].set(
-            jnp.where(keep, fslot, ep * sd_))
+             jnp.cumsum(counts).astype(jnp.int32)[:-1]])
+        pos = jnp.arange(t * top_k, dtype=jnp.int32) \
+            - starts[jnp.clip(ssl, 0, n_slots - 1)]
+        keep = (pos < cap) & (ssl < n_slots)
+
+        # pack send buffers: destination rank = slot // sd_, and the
+        # buffer layout itself encodes the slot — rows [m*cap, (m+1)*cap)
+        # of a rank's block belong to its local slot m, so the receiver
+        # needs no sort. Every dropped/unroutable assignment writes to
+        # one trash row that is sliced off before the all-to-all (a
+        # clipped scatter would let a dropped zero overwrite the kept
+        # row at position cap-1 — the old silent-drop corruption).
+        dst = jnp.clip(ssl // sd_, 0, ep - 1)
+        lpos = jnp.where(keep, (ssl % sd_) * cap + jnp.clip(pos, 0, cap - 1),
+                         sd_ * cap)
+        send = jnp.zeros((ep, sd_ * cap + 1, d), x_loc.dtype)
+        send = send.at[dst, lpos].set(
+            jnp.where(keep[:, None], xf[stok], 0.0))
 
         # scatter
-        recv_x = jax.lax.all_to_all(send_x, "ep", 0, 0)
-        recv_s = jax.lax.all_to_all(send_s, "ep", 0, 0)
+        recv = jax.lax.all_to_all(send[:, :sd_ * cap], "ep", 0, 0)
 
-        # local grouped FFN over this rank's slots
-        local_slot = jnp.where(recv_s.reshape(-1) < ep * sd_,
-                               recv_s.reshape(-1) % sd_, sd_)
-        n = ep * cap
-        order = jnp.argsort(local_slot)
-        xs = recv_x.reshape(n, d)[order]
-        ls = local_slot[order]
-        gs = jnp.bincount(ls, length=sd_ + 1)[:sd_]
-        st2 = jnp.concatenate([jnp.zeros(1, jnp.int32),
-                               jnp.cumsum(gs).astype(jnp.int32)[:-1]])
-        p2 = jnp.arange(n, dtype=jnp.int32) - st2[jnp.clip(ls, 0, sd_ - 1)]
-        valid = ls < sd_
-        buf = jnp.zeros((sd_, n, d), x_loc.dtype)
-        buf = buf.at[jnp.clip(ls, 0, sd_ - 1), jnp.clip(p2, 0, n - 1)].set(
-            jnp.where(valid[:, None], xs, 0.0))
+        # local grouped FFN over this rank's slots: rows of local slot m
+        # are every source rank's [m*cap, (m+1)*cap) block; empty rows
+        # are zero vectors and the FFN maps them to zero. Each sender
+        # also all-to-alls its kept per-slot counts (a tiny int array)
+        # so group_sizes can mark each slot's occupied extent and the
+        # kernel backends skip the zero tail tiles — exact occupancy on
+        # a 1-rank mesh (ep=1), the furthest occupied source block
+        # otherwise (every row past it is zero).
+        buf = recv.reshape(ep, sd_, cap, d).transpose(1, 0, 2, 3) \
+            .reshape(sd_, ep * cap, d)
+        kc = jnp.minimum(counts, cap).astype(jnp.int32).reshape(ep, sd_)
+        recv_cnt = jax.lax.all_to_all(kc, "ep", 0, 0)       # (src, sd_)
+        src = jnp.arange(ep, dtype=jnp.int32)[:, None]
+        gs = jnp.max(jnp.where(recv_cnt > 0, src * cap + recv_cnt, 0),
+                     axis=0)
         out = KOPS.expert_ffn_impl(buf, wg, wu, wd, gs, impl)
         out = jax.lax.psum(out.astype(jnp.float32), "tp")  # f sharded on tp
-        y = out[jnp.clip(ls, 0, sd_ - 1), jnp.clip(p2, 0, n - 1)]
-        y = jnp.where(valid[:, None], y, 0.0)
-        y = y[jnp.argsort(order)].reshape(ep, cap, d)
+        y = out.reshape(sd_, ep, cap, d).transpose(1, 0, 2, 3) \
+            .reshape(ep, sd_ * cap, d)
 
         # gather
         back = jax.lax.all_to_all(y.astype(x_loc.dtype), "ep", 0, 0)
 
         # weighted combine at the source
-        contrib = back[sdst, cpos].astype(jnp.float32)
-        w_flat = top_w.reshape(-1)[forder]
-        contrib = contrib * jnp.where(keep, w_flat, 0.0)[:, None]
-        comb = jnp.zeros((t, d), jnp.float32).at[ftok].add(contrib)
+        contrib = back[dst, jnp.clip(lpos, 0, sd_ * cap - 1)] \
+            .astype(jnp.float32)
+        contrib = contrib * jnp.where(keep, sw, 0.0)[:, None]
+        comb = jnp.zeros((t, d), jnp.float32).at[stok].add(contrib)
 
-        mvec = jnp.repeat(mask_loc.reshape(-1).astype(jnp.int32), top_k)
+        mask_flat = mask_loc.reshape(-1).astype(jnp.int32)   # (t,)
         loads = jnp.zeros(num_experts, jnp.int32).at[
-            top_i.reshape(-1)].add(mvec)
+            top_i.reshape(-1)].add(jnp.repeat(mask_flat, top_k))
         loads = jax.lax.psum(loads, ("data", "ep"))
-        return comb.reshape(b, s, d).astype(x_loc.dtype), loads
+        # dropped = routed assignments of ACTIVE tokens that were not
+        # kept (capacity overflow or a zero-replica expert); inactive
+        # continuous-batching slots never inflate the count
+        active = mask_flat[stok]
+        dropped = (top_k * jnp.sum(mask_flat)
+                   - jnp.sum(keep * active)).astype(jnp.float32)
+        dropped = jax.lax.psum(dropped, ("data", "ep"))
+        return comb.reshape(b, s, d).astype(x_loc.dtype), loads, dropped
 
     fn = smap(
         local, mesh=mesh,
@@ -277,9 +327,12 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
                   P("ep", None, "tp"), P("ep", None, "tp"),
                   P("ep", "tp", None),
                   P(), P()),
-        out_specs=(P("data", "ep", None), P()))
-    return fn(x, token_mask, router_w, slot_w["w_gate"], slot_w["w_up"],
-              slot_w["w_down"], tables["expert_slots"], tables["nrep"])
+        out_specs=(P("data", "ep", None), P(), P()))
+    y, loads, dropped = fn(
+        x, token_mask, router_w, slot_w["w_gate"], slot_w["w_up"],
+        slot_w["w_down"], tables["expert_slots"], tables["nrep"])
+    return y, {"expert_load": loads, "dropped": dropped,
+               "aux_loss": jnp.asarray(0.0, jnp.float32)}
 
 
 # ----------------------------------------------- serving hot-path hookup
@@ -306,16 +359,13 @@ def moe_ep_ffn(moe_params, h, state, ctx: EPContext, cfg,
     `state`: {'expert_slots' (E, R_cap), 'nrep' (E,), 'w_gate'/'w_up'
     (S, D, F), 'w_down' (S, F, D)} for THIS layer, maintained by
     ``serving.expert_runtime.ExpertRuntime``. Returns (y, metrics) in
-    the ``dispatch_moe`` metrics shape (expert_load, aux_loss)."""
+    the ``dispatch_moe`` metrics shape (expert_load, dropped,
+    aux_loss)."""
     slot_w = {k: state[k] for k in ("w_gate", "w_up", "w_down")}
     tables = {"expert_slots": state["expert_slots"], "nrep": state["nrep"]}
-    y, loads = moe_ep_layer(
+    return moe_ep_layer(
         h, moe_params["router"]["w_gate"], slot_w, tables, mesh=ctx.mesh,
         num_experts=cfg.moe.num_experts, top_k=cfg.moe.top_k,
         slots_per_device=ctx.slots_per_device,
         capacity_factor=ctx.capacity_factor, act=cfg.act, impl=cfg.impl,
         token_mask=token_mask)
-    # aux loss is a training-time metric; the serving hot path does not
-    # pay for the full-softmax probs it needs
-    return y, {"expert_load": loads,
-               "aux_loss": jnp.asarray(0.0, jnp.float32)}

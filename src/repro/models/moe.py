@@ -4,10 +4,15 @@ Two execution paths:
   * ``dispatch_moe`` — GShard-style grouped capacity dispatch expressed as
     einsums (differentiable, GSPMD-shardable: the dispatch contraction
     lowers to all-to-all when tokens are sharded over `data` and experts
-    over `model`). Used by train/prefill/decode steps under pjit.
+    over `model`). Used by train steps under pjit, and by serving
+    prefill/decode when the expert runtime is OFF.
   * the explicit EP path with replica slots lives in
-    ``repro.distributed.ep`` (shard_map + lax.all_to_all) — that one is
-    the paper-faithful serving path with MoEless serverless replica slots.
+    ``repro.distributed.ep`` (shard_map + lax.all_to_all) — the
+    paper-faithful serving path with MoEless serverless replica slots;
+    with ``ServingEngine(expert_runtime="on")`` BOTH prefill and decode
+    run through it. The two paths share one capacity/drop semantics
+    (same ``cfg.moe.capacity_factor``, same metrics dict, same kept
+    token set — see ``moe_ep_layer``).
 
 The router also emits the per-expert token-load histogram that feeds the
 MoEless Expert Load Predictor / Scaler (paper §4).
@@ -79,19 +84,24 @@ def experts_ffn(p, x, act: str, *, group_sizes=None, impl: str = "ref"):
 
 
 def dispatch_moe(p, x, *, top_k: int, num_experts: int,
-                 capacity_factor: float = 1.25, act: str = "swiglu",
+                 capacity_factor: float, act: str = "swiglu",
                  groups: int = 1, token_mask=None, impl: str = "ref"):
     """Grouped capacity dispatch (GShard).
 
     x: (B, S, D). Tokens are flattened and split into `groups` dispatch
     groups (set groups = number of data shards so each group's dispatch
     tensor stays local); capacity C = ceil(cf * k * Tg / E) per group.
+    `capacity_factor` has no default on purpose: it must be threaded
+    from ``cfg.moe.capacity_factor`` so this path and the EP slot data
+    plane (``distributed.ep.moe_ep_layer``) share ONE capacity/drop
+    semantics — the two used to default to different values (1.25 vs
+    2.0), silently desynchronising their drop behaviour.
     `token_mask` (B, S) marks tokens whose routing should be EXCLUDED
-    from the expert-load metric (inactive continuous-batching slots) —
-    compute is unaffected. The expert FFN over the capacity layout runs
-    through the `impl` kernel backend (kernels.ops). Returns
-    (y, metrics) where metrics carries the expert-load histogram and
-    aux loss.
+    from the expert-load and dropped metrics (inactive
+    continuous-batching slots) — compute is unaffected. The expert FFN
+    over the capacity layout runs through the `impl` kernel backend
+    (kernels.ops). Returns (y, metrics) where metrics carries the
+    expert-load histogram, the dropped-assignment count, and aux loss.
     """
     b, s, d = x.shape
     t = b * s
@@ -138,14 +148,23 @@ def dispatch_moe(p, x, *, top_k: int, num_experts: int,
                              impl=impl).reshape(num_experts, groups, cap, d)
     y = jnp.einsum("gtec,egcd->gtd", comb, expert_out)
 
+    # dropped = routed assignments of ACTIVE tokens that overflowed
+    # capacity. Inactive continuous-batching slots still OCCUPY capacity
+    # (compute is mask-free, same as the EP data plane) but must not
+    # inflate the drop metric the control plane meters.
+    kept_per_tok = keep.astype(jnp.float32).sum(axis=(2, 3))  # (g, tg)
+    if token_mask is None:
+        dropped = jnp.asarray(top_k * t, jnp.float32) - kept_per_tok.sum()
+    else:
+        am = token_mask.reshape(groups, tg).astype(jnp.float32)
+        dropped = top_k * am.sum() - (kept_per_tok * am).sum()
     metrics = {
         "expert_load": expert_loads(
             top_i.reshape(t, top_k), num_experts,
             None if token_mask is None else token_mask.reshape(t)),
         "aux_loss": load_balance_loss(probs, top_i.reshape(t, top_k),
                                       num_experts),
-        "dropped": jnp.asarray(top_k * t, jnp.float32)
-        - keep.astype(jnp.float32).sum(),
+        "dropped": dropped,
         "router_logits": logits.reshape(t, num_experts),
     }
     return y.reshape(b, s, d), metrics

@@ -219,6 +219,7 @@ def _apply_sublayer(cfg, sub: SubLayer, p, x, positions, *, cache=None,
                     impl=cfg.impl)
             metrics["expert_load"] = m["expert_load"]
             metrics["aux_loss"] = m["aux_loss"]
+            metrics["dropped"] = m["dropped"]
             if collect:   # predictor fine-tuning dataset (paper §5)
                 metrics["gate_input"] = h
                 if "router_logits" in m:
@@ -292,13 +293,23 @@ def _run_encoder(cfg, params, batch):
 
 
 def forward(cfg, params, batch, *, window: int = 0, collect: bool = False,
-            remat: str = "none", last_only: bool = False):
+            remat: str = "none", last_only: bool = False, ep_ctx=None,
+            ep_state=None, token_mask=None):
     """Train / prefill forward. batch: {tokens (B,S), [positions],
-    [vis_embeds, vis_mask], [enc_embeds]} -> (logits, metrics)."""
+    [vis_embeds, vis_mask], [enc_embeds]} -> (logits, metrics).
+
+    `ep_ctx` (static) + `ep_state` (traced pytree, same layout as
+    ``decode_step``'s) route every MoE sublayer through the EP slot
+    data plane with the expert runtime's live tables/weights — the
+    serving prefill analogue of the decode hot path, so both phases run
+    ONE routing semantics. `token_mask` (B, S) excludes tokens (padded
+    prefill) from the expert-load / dropped metrics."""
     pattern = layer_pattern(cfg)
     x = _embed(cfg, params, batch)
     bsz, seq_len = batch["tokens"].shape
     pos = _positions(cfg, batch, seq_len, bsz)
+    if token_mask is None:
+        token_mask = batch.get("token_mask")
     if cfg.encdec is not None:
         enc_out = _run_encoder(cfg, params, batch)
         x = x + _sinusoidal(seq_len, cfg.d_model).astype(x.dtype)[None]
@@ -308,24 +319,34 @@ def forward(cfg, params, batch, *, window: int = 0, collect: bool = False,
 
     from repro.distributed.sharding import constrain_activations
 
-    def body(h, layer_params):
+    def body(h, xs):
+        if ep_state is None:
+            layer_params = xs
+            layer_ep = [None] * len(pattern)
+        else:
+            layer_params, layer_ep = xs
         h = constrain_activations(h)
         ms = []
         for j, sub in enumerate(pattern):
             h, _, m = _apply_sublayer(cfg, sub, layer_params[j], h, pos,
                                       enc_out=enc_out, window=window,
-                                      collect=collect)
+                                      collect=collect,
+                                      token_mask=token_mask,
+                                      ep_ctx=ep_ctx, ep_state=layer_ep[j])
             ms.append(m)
         loads = [m["expert_load"] for m in ms if "expert_load" in m]
         aux = sum(m.get("aux_loss", 0.0) for m in ms)
         y = {"aux_loss": jnp.asarray(aux, jnp.float32)}
         if loads:
             y["expert_load"] = jnp.stack(loads)   # (moe_per_period, E)
+            y["dropped"] = jnp.stack(
+                [m["dropped"] for m in ms if "dropped" in m])
         if collect and loads:
             y["gate_input"] = jnp.stack(
                 [m["gate_input"] for m in ms if "gate_input" in m])
-            y["router_logits"] = jnp.stack(
-                [m["router_logits"] for m in ms if "router_logits" in m])
+            rl = [m["router_logits"] for m in ms if "router_logits" in m]
+            if rl:   # the EP data plane does not emit router logits
+                y["router_logits"] = jnp.stack(rl)
         return h, y
 
     if remat == "full":
@@ -333,7 +354,9 @@ def forward(cfg, params, batch, *, window: int = 0, collect: bool = False,
     elif remat == "dots":
         body = jax.checkpoint(
             body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
-    x, ys = jax.lax.scan(body, x, params["layers"])
+    xs_in = params["layers"] if ep_state is None \
+        else (params["layers"], ep_state)
+    x, ys = jax.lax.scan(body, x, xs_in)
     if last_only:   # prefill: only the last position feeds sampling
         x = x[:, -1:]
     x = L.norm(x, params["final_norm"], cfg.norm)
@@ -343,11 +366,13 @@ def forward(cfg, params, batch, *, window: int = 0, collect: bool = False,
         # (P, moe_per_period, E) -> (num_moe_layers, E)
         el = ys["expert_load"]
         metrics["expert_load"] = el.reshape(-1, el.shape[-1])
+        metrics["dropped"] = ys["dropped"].reshape(-1)
     if "gate_input" in ys:
         gi = ys["gate_input"]       # (P, mpp, B, S, D)
-        rl = ys["router_logits"]
         metrics["gate_input"] = gi.reshape((-1,) + gi.shape[2:])
-        metrics["router_logits"] = rl.reshape((-1,) + rl.shape[2:])
+        if "router_logits" in ys:
+            rl = ys["router_logits"]
+            metrics["router_logits"] = rl.reshape((-1,) + rl.shape[2:])
     return logits, metrics
 
 
@@ -446,6 +471,8 @@ def decode_step(cfg, params, batch, cache, cache_len, ep_state=None, *,
         loads = [m["expert_load"] for m in ms if "expert_load" in m]
         if loads:
             y["expert_load"] = jnp.stack(loads)
+            y["dropped"] = jnp.stack(
+                [m["dropped"] for m in ms if "dropped" in m])
         if collect and loads:
             y["gate_input"] = jnp.stack(
                 [m["gate_input"] for m in ms if "gate_input" in m])
@@ -459,6 +486,7 @@ def decode_step(cfg, params, batch, cache, cache_len, ep_state=None, *,
     if "expert_load" in ys:
         el = ys["expert_load"]
         metrics["expert_load"] = el.reshape(-1, el.shape[-1])
+        metrics["dropped"] = ys["dropped"].reshape(-1)
     if "gate_input" in ys:
         gi = ys["gate_input"]
         metrics["gate_input"] = gi.reshape((-1,) + gi.shape[2:])

@@ -109,6 +109,7 @@ class ServeResult:
     control: ControlPlane | None = None
     runtime: object | None = None     # ExpertRuntime when enabled
     clock_s: float = 0.0              # final serving-clock time
+    dropped_tokens: float = 0.0       # MoE capacity drops (all phases)
 
     def summary(self) -> dict:
         return percentile_summary(self.records)
@@ -158,11 +159,14 @@ class ServingEngine:
     ``expert_runtime="on"`` attaches a ``serving.expert_runtime.
     ExpertRuntime`` to every session: the control plane's replica plans
     are EXECUTED — applied as slot diffs to device-resident expert
-    weight banks — and the batched decode's MoE layers run through the
-    EP slot data plane (``distributed.ep.moe_ep_layer``) with the
-    runtime's live tables/weights. Prefill stays on the capacity
-    dispatch path (identical in both modes). Requires a session
-    ``control`` plane (the plan source)."""
+    weight banks — and BOTH phases' MoE layers (each admission's
+    prefill and the batched decode) run through the EP slot data plane
+    (``distributed.ep.moe_ep_layer``) with the runtime's live
+    tables/weights, so the predictor is fed by one routing semantics
+    end to end. The EP path shares the capacity dispatch's
+    capacity/drop semantics (one ``cfg.moe.capacity_factor``, same
+    metrics, same kept tokens — drops are counted, never silent).
+    Requires a session ``control`` plane (the plan source)."""
 
     def __init__(self, cfg, params, *, max_len: int = 512,
                  controller: ControlPlane | None = None,
@@ -260,9 +264,15 @@ class ServingEngine:
         """Prefill ONE request (B=1) into a fresh cache. Attention-only
         models are right-padded to a power-of-two bucket (bounds jit
         recompilations; pad tokens sit after the prompt so causal
-        attention never sees them and the masked metrics ignore them);
-        recurrent models run at exact length. The first output token is
-        sampled under `sampling` (argmax when None / temperature<=0).
+        attention never sees them and the masked metrics ignore them —
+        pad rows DO occupy MoE capacity, identically on both data
+        planes); recurrent models run at exact length. With a session
+        expert runtime attached, the prefill's MoE sublayers execute
+        through the EP slot data plane with the runtime's live
+        tables/weights — the same path the batched decode takes — so
+        prefill loads, drops, and routing feed the control plane under
+        ONE semantics. The first output token is sampled under
+        `sampling` (argmax when None / temperature<=0).
         Returns (first_token, cache, prompt_len, metrics, token_mask)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         plen = int(prompt.shape[0])
@@ -274,11 +284,24 @@ class ServingEngine:
                 toks = np.pad(prompt, (0, bucket - plen))
         mask = (np.arange(toks.shape[0]) < plen)
         cache = self.new_cache(1)
-        step = self._get_step(self._collect if collect is None else collect)
         batch = {"tokens": jnp.asarray(toks[None]),
                  "token_mask": jnp.asarray(mask[None])}
-        logits, cache, metrics = step(
-            self.params, batch, cache, jnp.asarray(0, jnp.int32))
+        collect = self._collect if collect is None else collect
+        runtime = self._session.runtime if self._session is not None \
+            else None
+        if runtime is not None:
+            # EP prefill: same jitted decode_step family as the batched
+            # decode, MoE sublayers on the slot data plane (prefill
+            # shapes compile their own cache entries; plan changes
+            # re-program the traced tables without recompiling)
+            step = self._get_ep_step(collect, runtime.ctx)
+            logits, cache, metrics = step(
+                self.params, batch, cache, jnp.asarray(0, jnp.int32),
+                runtime.ep_state())
+        else:
+            step = self._get_step(collect)
+            logits, cache, metrics = step(
+                self.params, batch, cache, jnp.asarray(0, jnp.int32))
         s = sampling or SamplingParams()
         if s.temperature <= 0:        # greedy: the pre-redesign argmax path
             first_tok = int(jnp.argmax(logits[0, plen - 1]))
@@ -387,10 +410,12 @@ class ServingEngine:
             if sess.control is not None and "expert_load" in metrics:
                 out = sess.control.step(
                     sess.now, self._gate_inputs(metrics),
-                    metrics["expert_load"], token_mask=mask)
+                    metrics["expert_load"], token_mask=mask,
+                    dropped=metrics.get("dropped"), phase="prefill")
                 dt = out.latency_s
                 if sess.runtime is not None:
-                    sess.runtime.apply(sess.now, out.events)
+                    sess.runtime.apply(sess.now, out.events,
+                                       phase="prefill")
             self._drive_controller(metrics, token_mask=mask)
             if dt is None:
                 dt = time.perf_counter() - t0
@@ -434,10 +459,11 @@ class ServingEngine:
         if sess.control is not None and "expert_load" in metrics:
             out = sess.control.step(
                 sess.now, self._gate_inputs(metrics),
-                metrics["expert_load"], token_mask=active)
+                metrics["expert_load"], token_mask=active,
+                dropped=metrics.get("dropped"), phase="decode")
             dt = out.latency_s
             if sess.runtime is not None:
-                sess.runtime.apply(sess.now, out.events)
+                sess.runtime.apply(sess.now, out.events, phase="decode")
         self._drive_controller(metrics, token_mask=active)
         if dt is None:
             dt = time.perf_counter() - t0
@@ -496,7 +522,9 @@ class ServingEngine:
             mean_batch_occupancy=float(np.mean(sess.occupancy))
             if sess.occupancy else 0.0,
             wall_s=time.perf_counter() - sess.wall0, control=sess.control,
-            runtime=sess.runtime, clock_s=sess.now)
+            runtime=sess.runtime, clock_s=sess.now,
+            dropped_tokens=float(getattr(sess.control, "dropped_tokens",
+                                         0.0) or 0.0))
 
     # ------------------------------------------------------ trace replay
 

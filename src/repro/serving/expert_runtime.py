@@ -67,9 +67,18 @@ class RuntimeStats:
     bytes_moved: float = 0.0       # actual bytes written into slot banks
     evictions: int = 0             # keep-alive expiries
     instance_seconds_gb: float = 0.0   # GB-seconds of actual residency
+    # per-phase breakdown: prefill iterations apply plans through the
+    # SAME diff machinery as decode (and the bootstrap load), so their
+    # cold/warm/prewarm and bytes are metered under their own key
+    by_phase: dict = field(default_factory=dict)
 
     def counts(self) -> tuple[int, int, int]:
         return self.cold_starts, self.warm_starts, self.prewarmed
+
+    def phase(self, name: str) -> dict:
+        return self.by_phase.setdefault(name, {
+            "iterations": 0, "cold_starts": 0, "warm_starts": 0,
+            "prewarmed": 0, "transfers": 0, "bytes_moved": 0.0})
 
 
 @dataclass
@@ -199,19 +208,36 @@ class ExpertRuntime:
                    slots_per_device=sd, mesh=mesh, keep_alive=keep_alive,
                    coeffs=control.coeffs)
 
-    def bootstrap(self, control=None, t: float = 0.0) -> ApplyReport | None:
-        """Install the balancer's deployment-time prewarm plans (paper
-        §5) so the runtime's residency starts where the analytic pool's
-        did; with no prewarmed balancer the slot banks start empty and
-        the first ``apply`` performs the initial weight load."""
-        prev = getattr(getattr(control, "bal", None), "prev", None)
-        if not prev:
-            return None
-        events = [PlanEvent(plan=prev[l], served=prev[l],
-                            lead_time=math.inf,
-                            exec_time=MOELESS_EXEC_TIME, serverless=True)
-                  for l in range(self.n_layers)]
-        return self.apply(t, events)
+    def bootstrap(self, control=None, t: float = 0.0) -> ApplyReport:
+        """Install an initial deployment so the EP data plane has live
+        tables BEFORE the first control-plane step — required now that
+        prefill also routes through the slot data plane (the first
+        admission's forward runs before any plan has been metered).
+
+        With a prewarmed balancer (paper §5) the balancer's
+        deployment-time plans are applied, so the runtime's residency
+        starts exactly where the analytic pool's did. Otherwise a
+        static uniform plan (one replica per expert, Megatron layout)
+        is materialised as the initial weight load — the same bytes any
+        deployment pays before serving its first token."""
+        bal = getattr(control, "bal", None)
+        prev = getattr(bal, "prev", None)
+        serverless = bool(getattr(bal, "serverless", False))
+        if prev:
+            events = [PlanEvent(plan=prev[l], served=prev[l],
+                                lead_time=math.inf,
+                                exec_time=MOELESS_EXEC_TIME,
+                                serverless=True)
+                      for l in range(self.n_layers)]
+        else:
+            from repro.core.plan import static_plan
+            plan = static_plan(self.num_experts, self.num_devices)
+            events = [PlanEvent(plan=plan, served=plan,
+                                lead_time=math.inf,
+                                exec_time=MOELESS_EXEC_TIME,
+                                serverless=serverless)
+                      for _ in range(self.n_layers)]
+        return self.apply(t, events, phase="bootstrap")
 
     # -------------------------------------------------------- lifecycle
 
@@ -264,11 +290,14 @@ class ExpertRuntime:
 
     # ------------------------------------------------------------ apply
 
-    def apply(self, t: float, events: list) -> ApplyReport:
+    def apply(self, t: float, events: list,
+              phase: str = "decode") -> ApplyReport:
         """Execute one iteration's planning decisions: reap expired
         instances, diff every layer's FULL plan against residency,
         materialise ONLY the changed slots, and rebuild the routing
-        tables from the warm-subset ``served`` plans."""
+        tables from the warm-subset ``served`` plans. `phase` tags the
+        iteration ('prefill' | 'decode' | 'bootstrap') in the per-phase
+        meters — prefill now executes plans through this same path."""
         if len(events) != self.n_layers:
             raise ValueError(f"{len(events)} plan events for "
                              f"{self.n_layers} MoE layers")
@@ -325,6 +354,13 @@ class ExpertRuntime:
         self._flush(updates)
         self._have_tables = True
         self.iterations += 1
+        ph = self.stats.phase(phase)
+        ph["iterations"] += 1
+        ph["cold_starts"] += rep.cold_starts
+        ph["warm_starts"] += rep.warm_starts
+        ph["prewarmed"] += rep.prewarmed
+        ph["transfers"] += rep.transfers
+        ph["bytes_moved"] += rep.bytes_moved
         return rep
 
     def _build_tables(self, layer: int, served) -> None:

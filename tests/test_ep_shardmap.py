@@ -47,12 +47,13 @@ for plan in plans:
         slot_w = EP.materialise_slots(
             {"w_gate": wg, "w_up": wu, "w_down": wd},
             tables["slot_expert"], mesh)
-        y, loads = EP.moe_ep_layer(
+        y, m = EP.moe_ep_layer(
             x, rw, slot_w, tables, mesh=mesh, num_experts=E, top_k=TOPK,
             slots_per_device=4, capacity_factor=2.0)
     assert float(jnp.abs(y - ref).max()) < 1e-4
     expected = np.asarray(jnp.bincount(ti.reshape(-1), length=E))
-    assert (np.asarray(loads) == expected).all()
+    assert (np.asarray(m["expert_load"]) == expected).all()
+    assert float(m["dropped"]) == 0.0
 print("OK")
 """
 

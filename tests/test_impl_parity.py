@@ -80,11 +80,11 @@ def _ep_path(p, x, e, k, impl):
     with mesh:
         slot_w = EP.materialise_slots(p["experts"], tables["slot_expert"],
                                       mesh)
-        y, loads = EP.moe_ep_layer(
+        y, m = EP.moe_ep_layer(
             x, p["router"]["w_gate"], slot_w, tables, mesh=mesh,
             num_experts=e, top_k=k, slots_per_device=spd,
-            capacity_factor=2.0, impl=impl)
-    return np.asarray(y, np.float32), np.asarray(loads)
+            capacity_factor=float(e), impl=impl)
+    return np.asarray(y, np.float32), np.asarray(m["expert_load"])
 
 
 # name -> (E, top_k, (B, S), capacity_factor, dead_experts, drops_possible)

@@ -59,7 +59,8 @@ def test_groups_do_not_change_semantics_much():
 def test_load_conservation(k, e):
     k = min(k, e)
     p, x = _setup(t=32, e=e, k=k)
-    _, m = MOE.dispatch_moe(p, x, top_k=k, num_experts=e)
+    _, m = MOE.dispatch_moe(p, x, top_k=k, num_experts=e,
+                            capacity_factor=float(e))
     assert int(m["expert_load"].sum()) == 32 * k
 
 
@@ -75,5 +76,6 @@ def test_aux_loss_minimal_when_balanced():
     e = 4
     p, x = _setup(e=e)
     p["router"]["w_gate"] = jnp.zeros_like(p["router"]["w_gate"])
-    _, m = MOE.dispatch_moe(p, x, top_k=2, num_experts=e)
+    _, m = MOE.dispatch_moe(p, x, top_k=2, num_experts=e,
+                            capacity_factor=float(e))
     assert 0.9 <= float(m["aux_loss"]) <= 1.5
