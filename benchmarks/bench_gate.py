@@ -1,0 +1,134 @@
+"""Benchmark regression gate over DETERMINISTIC counters — no
+wall-clock anywhere, so it can run (and fail) meaningfully in CI.
+
+Two committed baselines:
+
+  benchmarks/BENCH_serving.json — expert-runtime serving meters per
+      slot_dtype (bytes moved, GB-s billed, cold/warm/prewarm,
+      transfers, dropped tokens) from
+      ``serving_bench.deterministic_counters``
+  benchmarks/BENCH_kernels.json — slot-row byte footprints, the
+      quantized-kernel error contract and exact ref==interpret backend
+      agreement from ``kernel_bench.deterministic_counters``
+
+Every leaf is a pure function of (seed, config, code) on one platform,
+so ANY drift is a real behaviour change, not noise:
+
+  * cost-like leaves (bytes, GB-s, drops, error bounds, ratios) may
+    only go DOWN — an increase beyond tolerance fails the gate, a
+    decrease prints a hint to refresh the baseline so the improvement
+    is locked in;
+  * everything else (lifecycle counts, iteration counts, byte
+    formulas, agreement contracts) must match exactly (within float
+    tolerance).
+
+  PYTHONPATH=src python -m benchmarks.bench_gate          # CI check
+  PYTHONPATH=src python -m benchmarks.bench_gate --write  # refresh
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+_DIR = pathlib.Path(__file__).parent
+BASELINES = {
+    "serving": _DIR / "BENCH_serving.json",
+    "kernels": _DIR / "BENCH_kernels.json",
+}
+
+# leaves where an increase is a regression but a decrease is an
+# improvement (everything not listed must match exactly)
+LOWER_IS_BETTER = {
+    "bytes_moved", "instance_seconds_gb", "dropped_tokens",
+    "int8_over_fp32_bytes", "int8_over_fp32_gb_s",
+    "int8_over_fp32_row_bytes_mixtral_full",
+    "quant_vs_fp32_max_abs_err", "quant_roundtrip_max_abs_err",
+    "interpret_vs_ref_max_abs_err",
+}
+RTOL = 1e-6
+
+
+def _fresh(suite: str) -> dict:
+    if suite == "serving":
+        from benchmarks.serving_bench import deterministic_counters
+    else:
+        from benchmarks.kernel_bench import deterministic_counters
+    return deterministic_counters()
+
+
+def _leaves(tree: dict, prefix: str = ""):
+    for k, v in tree.items():
+        path = f"{prefix}.{k}" if prefix else k
+        if isinstance(v, dict):
+            yield from _leaves(v, path)
+        else:
+            yield path, k, v
+
+
+def compare(suite: str, base: dict, fresh: dict) -> tuple[list, list]:
+    """Returns (regressions, improvements) as printable strings."""
+    regressions, improvements = [], []
+    bleaves = dict((p, v) for p, _, v in _leaves(base))
+    for path, key, new in _leaves(fresh):
+        if path not in bleaves:
+            regressions.append(f"{suite}/{path}: not in baseline "
+                               f"(schema drift — refresh with --write)")
+            continue
+        old = bleaves.pop(path)
+        if isinstance(new, str) or isinstance(old, str):
+            if new != old:
+                regressions.append(f"{suite}/{path}: {old!r} -> {new!r}")
+            continue
+        tol = RTOL * max(abs(float(old)), abs(float(new)), 1e-30)
+        if abs(float(new) - float(old)) <= tol:
+            continue
+        if key in LOWER_IS_BETTER and float(new) < float(old):
+            improvements.append(f"{suite}/{path}: {old} -> {new}")
+        else:
+            regressions.append(f"{suite}/{path}: {old} -> {new}")
+    for path in bleaves:
+        regressions.append(f"{suite}/{path}: missing from fresh run "
+                           f"(schema drift — refresh with --write)")
+    return regressions, improvements
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true",
+                    help="refresh the committed baselines from a fresh "
+                         "run instead of checking against them")
+    ap.add_argument("--only", choices=sorted(BASELINES), default=None)
+    args = ap.parse_args(argv)
+
+    failed = False
+    for suite, path in BASELINES.items():
+        if args.only and suite != args.only:
+            continue
+        fresh = _fresh(suite)
+        if args.write:
+            path.write_text(json.dumps(fresh, indent=1) + "\n")
+            print(f"wrote {path}")
+            continue
+        if not path.exists():
+            print(f"FAIL {suite}: no baseline at {path} "
+                  f"(create with --write)")
+            failed = True
+            continue
+        base = json.loads(path.read_text())
+        regressions, improvements = compare(suite, base, fresh)
+        for line in improvements:
+            print(f"IMPROVED {line}  (refresh baseline with --write)")
+        for line in regressions:
+            print(f"REGRESSED {line}")
+        if regressions:
+            failed = True
+        else:
+            print(f"ok {suite}: {sum(1 for _ in _leaves(fresh))} counters "
+                  f"match {path.name}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

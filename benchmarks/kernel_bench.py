@@ -5,6 +5,15 @@ the kernels actually lower (CPU wall time of the jnp path is NOT TPU
 perf; the roofline module carries the TPU projection). On CPU one tiny
 `pallas_interpret` row keeps the cross-backend comparison alive without
 minutes of interpreter wall time. Reports us/call + analytic MXU targets.
+
+The quantized lane benches the DEQUANTIZING kernel family
+(``ops.expert_ffn_quant``: int8 slot bank + fp32 per-row scales,
+kernels.quant layout) next to the fp32 kernels, with the bank bytes each
+shape materialises per expert row — the transfer every serverless cold
+start pays. ``deterministic_counters`` exports the wall-clock-free
+numbers (bytes/row, quantization error bounds, backend agreement) that
+``benchmarks/BENCH_kernels.json`` commits and ``benchmarks.bench_gate``
+regression-gates in CI.
 """
 from __future__ import annotations
 
@@ -13,24 +22,56 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro.kernels import ops, quant
 
 PEAK_FLOPS = 197e12
 
 
-def bench(e, c, d, f, impl: str = "ref", iters: int = 5):
-    key = jax.random.PRNGKey(0)
-    ks = jax.random.split(key, 4)
+def _inputs(e, c, d, f):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
     x = jax.random.normal(ks[0], (e, c, d), jnp.float32)
     wg = jax.random.normal(ks[1], (e, d, f), jnp.float32) * 0.1
     wu = jax.random.normal(ks[2], (e, d, f), jnp.float32) * 0.1
     wd = jax.random.normal(ks[3], (e, f, d), jnp.float32) * 0.1
     gs = jnp.full((e,), c, jnp.int32)
+    return x, wg, wu, wd, gs
+
+
+def row_bytes(d, f, quantized: bool) -> int:
+    """Slot-bank bytes ONE swiglu expert materialises (the cold-start
+    transfer): 3 fp32 matrices, or int8 values + fp32 per-row scales."""
+    if quantized:
+        return 3 * d * f + (2 * d + f) * 4
+    return 3 * d * f * 4
+
+
+def bench(e, c, d, f, impl: str = "ref", iters: int = 5):
+    x, wg, wu, wd, gs = _inputs(e, c, d, f)
     out = ops.expert_ffn(x, wg, wu, wd, gs, impl=impl)
     out.block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
         out = ops.expert_ffn(x, wg, wu, wd, gs, impl=impl)
+        out.block_until_ready()
+    dt = (time.perf_counter() - t0) / iters
+    flops = 6 * e * c * d * f
+    return dt * 1e6, flops / PEAK_FLOPS * 1e6
+
+
+def bench_quant(e, c, d, f, impl: str = "ref", iters: int = 5):
+    """us/call of the dequantizing expert FFN over a pre-quantized bank
+    (quantization itself happens once at materialisation, off the hot
+    path — it is not in the timed region)."""
+    x, wg, wu, wd, gs = _inputs(e, c, d, f)
+    qb = quant.quantize_expert_bank(
+        {"w_gate": wg, "w_up": wu, "w_down": wd})
+    args = (x, qb["w_gate"], qb["w_gate_scale"], qb["w_up"],
+            qb["w_up_scale"], qb["w_down"], qb["w_down_scale"], gs)
+    out = ops.expert_ffn_quant(*args, impl=impl)
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = ops.expert_ffn_quant(*args, impl=impl)
         out.block_until_ready()
     dt = (time.perf_counter() - t0) / iters
     flops = 6 * e * c * d * f
@@ -44,18 +85,67 @@ def main():
     rows = []
     for e, c, d, f in [(8, 128, 512, 1792), (16, 256, 512, 800),
                        (8, 512, 1024, 3584)]:
+        bank_mb = e * row_bytes(d, f, False) / 1e6
+        bank_q_mb = e * row_bytes(d, f, True) / 1e6
         for impl in impls:
             us, tpu_us = bench(e, c, d, f, impl=impl)
             rows.append((f"kernel/expert_ffn_{impl}_e{e}c{c}d{d}f{f}", us,
-                         f"tpu_roofline={tpu_us:.1f}us"))
+                         f"tpu_roofline={tpu_us:.1f}us "
+                         f"bank_bytes={bank_mb:.2f}MB"))
+            us_q, _ = bench_quant(e, c, d, f, impl=impl)
+            rows.append((f"kernel/expert_ffn_quant_{impl}_"
+                         f"e{e}c{c}d{d}f{f}", us_q,
+                         f"row_bytes={row_bytes(d, f, True)}B "
+                         f"(fp32 {row_bytes(d, f, False)}B, "
+                         f"x{row_bytes(d, f, True) / row_bytes(d, f, False):.3f}) "
+                         f"bank_bytes={bank_q_mb:.2f}MB"))
     if "pallas" not in impls:
         # interpret mode is a correctness vehicle, not a perf number —
-        # one tiny shape records that the Pallas path stays runnable
+        # one tiny shape records that the Pallas paths stay runnable
         e, c, d, f = 2, 16, 32, 64
         us, _ = bench(e, c, d, f, impl="pallas_interpret", iters=2)
         rows.append((f"kernel/expert_ffn_pallas_interpret_"
                      f"e{e}c{c}d{d}f{f}", us, "interpret_smoke"))
+        us, _ = bench_quant(e, c, d, f, impl="pallas_interpret", iters=2)
+        rows.append((f"kernel/expert_ffn_quant_pallas_interpret_"
+                     f"e{e}c{c}d{d}f{f}", us,
+                     f"interpret_smoke row_bytes={row_bytes(d, f, True)}B"))
     return rows
+
+
+def deterministic_counters():
+    """Wall-clock-free kernel-level counters for the regression gate:
+    slot-row byte footprints per format, the quantized-vs-fp32 output
+    error on a fixed seed (the tolerance contract), and exact
+    ref==interpret backend agreement of the dequantizing kernels."""
+    e, c, d, f = 4, 24, 32, 64
+    x, wg, wu, wd, _ = _inputs(e, c, d, f)
+    gs = jnp.asarray([c, c // 2, 0, c], jnp.int32)
+    qb = quant.quantize_expert_bank(
+        {"w_gate": wg, "w_up": wu, "w_down": wd})
+    args = (x, qb["w_gate"], qb["w_gate_scale"], qb["w_up"],
+            qb["w_up_scale"], qb["w_down"], qb["w_down_scale"], gs)
+    y = ops.expert_ffn(x, wg, wu, wd, gs, impl="ref")
+    yq = ops.expert_ffn_quant(*args, impl="ref")
+    yq_i = ops.expert_ffn_quant(*args, impl="pallas_interpret")
+    deq = quant.dequantize_expert_bank(qb)
+    rt_err = max(float(jnp.max(jnp.abs(deq[k] - w)))
+                 for k, w in (("w_gate", wg), ("w_up", wu),
+                              ("w_down", wd)))
+    big_d, big_f = 4096, 14336    # mixtral-8x7b full-size expert
+    return {
+        "shape": f"e{e}c{c}d{d}f{f}",
+        "row_bytes_fp32": row_bytes(d, f, False),
+        "row_bytes_int8": row_bytes(d, f, True),
+        "row_bytes_fp32_mixtral_full": row_bytes(big_d, big_f, False),
+        "row_bytes_int8_mixtral_full": row_bytes(big_d, big_f, True),
+        "int8_over_fp32_row_bytes_mixtral_full": (
+            row_bytes(big_d, big_f, True) / row_bytes(big_d, big_f, False)),
+        "quant_vs_fp32_max_abs_err": float(jnp.max(jnp.abs(yq - y))),
+        "quant_roundtrip_max_abs_err": rt_err,
+        "interpret_vs_ref_max_abs_err": float(
+            jnp.max(jnp.abs(yq_i - yq))),
+    }
 
 
 if __name__ == "__main__":

@@ -5,19 +5,33 @@ the control-plane overhead per iteration — every control-plane row
 drives the single ``repro.core.control.ControlPlane.step``
 implementation (vectorized planning = 1 host sync).
 
+``deterministic_counters`` is the wall-clock-free companion: the
+expert-runtime lane's byte/GB-s/lifecycle meters per slot_dtype,
+reproducible bit-for-bit on one platform — the numbers committed to
+``benchmarks/BENCH_serving.json`` and regression-gated by
+``benchmarks.bench_gate`` in CI.
+
   PYTHONPATH=src python -m benchmarks.serving_bench [--slots 8]
+  PYTHONPATH=src python -m benchmarks.serving_bench --counters
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import numpy as np
 
 
+def _with_slot_dtype(cfg, slot_dtype: str):
+    return cfg.with_(moe=dataclasses.replace(cfg.moe,
+                                             slot_dtype=slot_dtype))
+
+
 def main(slots: int = 8, gen: int = 32, prompt_len: int = 16,
-         arch: str = "mixtral-8x7b", impl: str = "auto"):
+         arch: str = "mixtral-8x7b", impl: str = "auto",
+         slot_dtype: str = "fp32"):
     from repro.configs import get_config
     from repro.core import predictor as P
     from repro.models import model as M
@@ -25,6 +39,7 @@ def main(slots: int = 8, gen: int = 32, prompt_len: int = 16,
     from repro.serving.scheduler import GenRequest, SamplingParams
 
     cfg = get_config(arch, smoke=True).with_(dtype="float32", impl=impl)
+    cfg = _with_slot_dtype(cfg, slot_dtype)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     max_len = prompt_len + gen + 1
@@ -107,7 +122,8 @@ def main(slots: int = 8, gen: int = 32, prompt_len: int = 16,
          f"({syncs / max(iters, 1):.2f} host syncs/iter)"),
         ("serve_batched+runtime", rtm_s / tokens * 1e6,
          f"{tokens / rtm_s:.1f} tok/s "
-         f"(cold/warm/prewarm {rst.cold_starts}/{rst.warm_starts}/"
+         f"(slot_dtype={slot_dtype}, cold/warm/prewarm "
+         f"{rst.cold_starts}/{rst.warm_starts}/"
          f"{rst.prewarmed}, {rst.transfers} slot transfers, "
          f"{rst.bytes_moved / 1e6:.1f}MB moved, "
          f"{rst.instance_seconds_gb:.3g} GB-s, "
@@ -116,12 +132,85 @@ def main(slots: int = 8, gen: int = 32, prompt_len: int = 16,
     ]
 
 
+def deterministic_counters(slots: int = 6, gen: int = 8,
+                           prompt_len: int = 16,
+                           arch: str = "mixtral-8x7b", impl: str = "auto"):
+    """The serving numbers that are DETERMINISTIC on one platform — no
+    wall-clock anywhere. One expert-runtime serving run per slot_dtype
+    under the MoEless control plane: the serving clock advances by
+    MODELED iteration latency, so lifecycle counts, bytes moved and
+    GB-s billed are pure functions of (seed, config). These rows are
+    the committed ``BENCH_serving.json`` baseline that
+    ``benchmarks.bench_gate`` diffs in CI."""
+    from repro.configs import get_config
+    from repro.configs.base import SLOT_DTYPES
+    from repro.core import predictor as P
+    from repro.models import model as M
+    from repro.serving.engine import MoElessController, ServingEngine
+    from repro.serving.scheduler import GenRequest
+
+    out = {"arch": arch, "slots": slots, "gen": gen,
+           "prompt_len": prompt_len}
+    for slot_dtype in SLOT_DTYPES:
+        cfg = get_config(arch, smoke=True).with_(dtype="float32",
+                                                 impl=impl)
+        cfg = _with_slot_dtype(cfg, slot_dtype)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        reqs = [GenRequest(
+            rid=i, arrival=0.0,
+            prompt=rng.integers(0, cfg.vocab_size, size=prompt_len,
+                                dtype=np.int32),
+            max_new_tokens=gen) for i in range(slots)]
+        pred = P.from_gates(cfg, params, distance=1)
+        ctrl = MoElessController(cfg, num_devices=8, predictor=pred)
+        engine = ServingEngine(cfg, params, max_len=prompt_len + gen + 1,
+                               expert_runtime="on")
+        res = engine.serve(reqs, num_slots=slots, control=ctrl)
+        st = res.runtime.finalize(res.clock_s)
+        out[f"serve_{slot_dtype}"] = {
+            "iterations": int(res.iterations),
+            "prefills": int(res.prefills),
+            "ep_prefill_iterations": int(
+                st.by_phase.get("prefill", {}).get("iterations", 0)),
+            "cold_starts": int(st.cold_starts),
+            "warm_starts": int(st.warm_starts),
+            "prewarmed": int(st.prewarmed),
+            "transfers": int(st.transfers),
+            "evictions": int(st.evictions),
+            "bytes_moved": float(st.bytes_moved),
+            "instance_seconds_gb": float(st.instance_seconds_gb),
+            "dropped_tokens": float(res.dropped_tokens),
+        }
+    f32, i8 = out["serve_fp32"], out["serve_int8"]
+    # the headline contract (ISSUE/ROADMAP 4a): quantized slot banks
+    # move <= 0.30x the bytes behind every cold start
+    out["int8_over_fp32_bytes"] = i8["bytes_moved"] / f32["bytes_moved"]
+    out["int8_over_fp32_gb_s"] = (
+        i8["instance_seconds_gb"] / f32["instance_seconds_gb"])
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--gen", type=int, default=32)
+    from repro.configs.base import SLOT_DTYPES
     from repro.kernels import IMPLS
     ap.add_argument("--impl", default="auto", choices=IMPLS)
+    ap.add_argument("--slot-dtype", default="fp32", choices=SLOT_DTYPES,
+                    help="expert slot-bank storage format for the "
+                         "runtime lane")
+    ap.add_argument("--counters", action="store_true",
+                    help="print the deterministic counter JSON "
+                         "(the BENCH_serving.json payload) instead of "
+                         "the wall-clock rows")
     a = ap.parse_args()
-    for name, us, derived in main(slots=a.slots, gen=a.gen, impl=a.impl):
-        print(f"{name},{us:.1f},{derived}")
+    if a.counters:
+        import json
+        print(json.dumps(deterministic_counters(impl=a.impl), indent=1))
+    else:
+        for name, us, derived in main(slots=a.slots, gen=a.gen,
+                                      impl=a.impl,
+                                      slot_dtype=a.slot_dtype):
+            print(f"{name},{us:.1f},{derived}")

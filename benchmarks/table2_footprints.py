@@ -3,13 +3,22 @@ computed from the FULL architecture configs (analytic, exact):
 
   mixtral-offloading / ours: one gate replica per MoE layer (D x E f32)
   promoe: layer-specific from-scratch MLP (D x 8D + 8D x E per layer)
+
+Extended with the EXPERT footprint per slot_dtype for every bundled MoE
+config: the bytes one expert replica occupies in a serverless slot bank
+(``costmodel.param_bytes`` — the same byte base the cost model bills
+and the runtime meters), native dtype vs int8 quantized
+(kernels.quant).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import pathlib
 
 from repro.configs import get_config
+from repro.configs.base import SLOT_DTYPES, list_archs
+from repro.core.costmodel import param_bytes
 
 MODELS = ["mixtral-8x7b", "phi-3.5-moe", "llama4-maverick-400b-a17b"]
 PAPER_MB = {  # Table 2 reference values
@@ -30,6 +39,19 @@ def footprints(arch: str) -> dict:
             "ours_mb": gate / 1e6}
 
 
+def expert_footprints(arch: str) -> dict:
+    """Per-slot_dtype bytes of ONE expert replica (the cold-start
+    transfer / GB-s billing unit) for a bundled MoE config."""
+    cfg = get_config(arch)
+    out = {}
+    for sd in SLOT_DTYPES:
+        c = cfg.with_(moe=dataclasses.replace(cfg.moe, slot_dtype=sd))
+        out[f"expert_{sd}_mb"] = param_bytes(c) / 1e6
+    out["expert_int8_ratio"] = (out["expert_int8_mb"]
+                                / out["expert_fp32_mb"])
+    return out
+
+
 def main():
     rows = []
     store = {}
@@ -44,7 +66,21 @@ def main():
         rows.append((f"table2/{arch}/ratio", 0.0,
                      f"ours/promoe={f['ours_mb'] / f['promoe_mb'] * 100:.1f}"
                      f"% (paper: <2%... <4%)"))
+    # expert slot-bank footprint per storage format, EVERY bundled MoE
+    # config (not just the paper's table-2 models)
+    for arch in list_archs():
+        cfg = get_config(arch)
+        if not cfg.is_moe:
+            continue
+        ef = expert_footprints(arch)
+        store.setdefault(arch, {}).update(ef)
+        rows.append((
+            f"table2/{arch}/expert_slot_bank", 0.0,
+            " ".join(f"{sd}={ef[f'expert_{sd}_mb']:.2f}MB"
+                     for sd in SLOT_DTYPES)
+            + f" (int8 x{ef['expert_int8_ratio']:.3f})"))
     out = pathlib.Path(__file__).parent / "results" / "table2.json"
+    out.parent.mkdir(exist_ok=True)
     out.write_text(json.dumps(store, indent=1))
     return rows
 

@@ -21,6 +21,7 @@ import argparse
 import numpy as np
 
 from repro.configs import get_config
+from repro.configs.base import SLOT_DTYPES
 from repro.core.simulator import ServingSimulator
 from repro.core.trace import TraceConfig, generate_requests
 from repro.kernels import IMPLS
@@ -56,6 +57,8 @@ def run_simulator(args):
 
 
 def run_real_model(args):
+    import dataclasses
+
     import jax
 
     from repro.core import predictor as P
@@ -70,6 +73,11 @@ def run_real_model(args):
     for ai, arch in enumerate(("mixtral-8x7b", "phi-3.5-moe")):
         cfg = get_config(arch, smoke=True).with_(dtype="float32",
                                                  impl=args.impl)
+        # slot_dtype is a CONFIG rewrite, not an engine knob: the control
+        # plane's cost coefficients and the runtime's slot banks both
+        # derive their byte base from cfg, so they can never disagree
+        cfg = cfg.with_(moe=dataclasses.replace(
+            cfg.moe, slot_dtype=args.slot_dtype))
         # smoke configs of the two archs coincide by design (<=4 experts);
         # fold the arch index into the key so their weights differ
         params = M.init_params(cfg, jax.random.fold_in(
@@ -79,6 +87,8 @@ def run_real_model(args):
             duration_s=args.duration, base_rate=args.rate, seed=args.seed))
         rt_note = ", expert runtime ON (EP slot data plane)" \
             if args.expert_runtime == "on" else ""
+        if args.slot_dtype != "fp32":
+            rt_note += f", slot_dtype={args.slot_dtype}"
         print(f"\n=== {arch} [real model, continuous batching, "
               f"impl={args.impl}, temperature={args.temperature}{rt_note}] "
               f"({len(trace)} requests, "
@@ -165,6 +175,13 @@ def main():
                          "through the EP slot data plane, with "
                          "drop-equivalent capacity semantics to the "
                          "dispatch path (real-model path only)")
+    ap.add_argument("--slot-dtype", default="fp32", choices=SLOT_DTYPES,
+                    help="storage format of the serverless expert slot "
+                         "banks (real-model path): 'int8' quantizes the "
+                         "banks once (symmetric per-row scales) so every "
+                         "cold start moves ~4x fewer bytes and residency "
+                         "bills ~4x fewer GB-s, dequantizing inside the "
+                         "expert-FFN kernels")
     ap.add_argument("--time-scale", type=float, default=5000.0,
                     help="serving-clock multiplier for the real-model "
                          "path: smoke-model modeled latencies are ~1000x "

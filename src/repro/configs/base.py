@@ -12,6 +12,15 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 
+# storage format of serverless expert slot banks (the bytes every cold
+# start moves and every GB-s of residency bills):
+#   fp32 — native parameter dtype (no quantization; name matches the
+#          smoke configs' float32 serving dtype)
+#   int8 — symmetric per-expert-row-scale int8 (repro.kernels.quant):
+#          ~0.25x the bank bytes, dequantized inside the kernel tile loop
+SLOT_DTYPES = ("fp32", "int8")
+
+
 @dataclass(frozen=True)
 class MoESpec:
     """Mixture-of-Experts sublayer spec."""
@@ -23,6 +32,11 @@ class MoESpec:
     router_jitter: float = 0.0
     # MoEless serverless-expert control plane (paper §3-4)
     max_replica_slots: int = 0     # 0 => num_experts (no over-provisioning)
+    # expert slot-bank storage format (see SLOT_DTYPES above); threads
+    # end to end: ExpertRuntime bank layout, the dequantizing kernel
+    # family, and the analytic cost model's expert_bytes all derive
+    # from this one knob
+    slot_dtype: str = "fp32"
 
 
 @dataclass(frozen=True)

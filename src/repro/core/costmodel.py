@@ -31,6 +31,40 @@ class Hardware:
 
 V5E = Hardware()
 
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2}
+
+
+def param_bytes(cfg) -> float:
+    """M_e — bytes of ONE expert replica as actually stored in a slot
+    bank, derived from the config (never hardcoded to a dtype):
+
+      slot_dtype 'fp32' — native parameter dtype (``cfg.dtype``):
+                          n_mats * d * f * itemsize
+      slot_dtype 'int8' — int8 values + one fp32 scale per expert row
+                          (repro.kernels.quant): n_mats * d * f bytes
+                          plus 4 bytes per contraction row (w_gate/w_up
+                          scale over D, w_down over F)
+
+    This is THE byte base shared by the analytic side (cold-start
+    latency, GB-s residency billing, ``derive_coeffs``), the executing
+    ``ExpertRuntime``'s per-slot transfer metering, and the footprint
+    table (benchmarks/table2_footprints.py) — deriving it in one place
+    is what keeps the runtime-vs-analytic meters exactly equal."""
+    d = cfg.d_model
+    f = cfg.moe.d_ff if cfg.is_moe else cfg.d_ff
+    n_mats = 3 if cfg.act == "swiglu" else 2
+    slot_dtype = getattr(cfg.moe, "slot_dtype", "fp32") if cfg.is_moe \
+        else "fp32"
+    if slot_dtype == "int8":
+        # scale rows: D per up-projection matrix (w_gate/w_up), F for
+        # the down projection
+        scale_rows = (n_mats - 1) * d + f
+        return float(n_mats * d * f + scale_rows * 4)
+    if slot_dtype != "fp32":
+        raise ValueError(f"unknown slot_dtype {slot_dtype!r}; expected "
+                         "one of ('fp32', 'int8')")
+    return float(n_mats * d * f * _DTYPE_BYTES.get(cfg.dtype, 2))
+
 
 @dataclass(frozen=True)
 class LayerCostCoeffs:
@@ -47,11 +81,14 @@ def derive_coeffs(cfg, hw: Hardware = V5E, *, batch_tokens: int = 4096
     Expert FFN: 3 matmuls (swiglu) => 6*d*f FLOP per routed token, but at
     serving batch sizes the expert is memory-bandwidth bound when its
     weight bytes exceed arithmetic reuse — take max(compute, hbm) time.
+    ``expert_bytes`` comes from ``param_bytes(cfg)``: it honours the
+    model dtype AND the slot-bank storage format (``cfg.moe.slot_dtype``)
+    so quantized slot banks bill their real, smaller footprint.
     """
     d = cfg.d_model
     f = cfg.moe.d_ff if cfg.is_moe else cfg.d_ff
     n_mats = 3 if cfg.act == "swiglu" else 2
-    expert_bytes = n_mats * d * f * hw.bytes_per_elem
+    expert_bytes = param_bytes(cfg)
     flops_per_tok = 2 * n_mats * d * f
     alpha_compute = flops_per_tok / hw.peak_flops
     # per-token share of streaming the expert weights once per iteration,

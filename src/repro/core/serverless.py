@@ -20,7 +20,14 @@ def cold_start_latency(expert_bytes: float, hw: Hardware = V5E) -> float:
     activation plus streaming the replica weights over ICI. Shared by the
     analytic ``ServerlessExpertPool`` and the executing
     ``serving.expert_runtime.ExpertRuntime`` so both classify a replica
-    as prewarmed (hidden by the predictor's lead) or cold identically."""
+    as prewarmed (hidden by the predictor's lead) or cold identically.
+
+    `expert_bytes` must come from ``costmodel.param_bytes(cfg)`` (via
+    ``derive_coeffs``): it is derived from the model dtype and the slot
+    storage format (``cfg.moe.slot_dtype``), never hardcoded, so the
+    cost model and the runtime can never silently disagree on the byte
+    base — int8 slot banks really do cold-start ~4x faster and bill
+    ~4x fewer GB-s."""
     return hw.instance_startup_s + expert_bytes / hw.ici_bw
 
 

@@ -130,7 +130,19 @@ def pad_expert_bank(expert_weights):
 
 
 def _slot_spec(k):
-    return P("ep", None, "tp") if k != "w_down" else P("ep", "tp", None)
+    """Sharding spec of one slot-bank leaf. Quantized banks
+    (cfg.moe.slot_dtype='int8', repro.kernels.quant) carry a fp32
+    `*_scale` companion per weight whose single trailing axis is the
+    matmul contraction axis of its int8 partner — D (replicated) for
+    w_gate/w_up, F (tp-sharded) for w_down — so each scale shards
+    exactly like the axis it rescales."""
+    if k == "w_down":
+        return P("ep", "tp", None)
+    if k == "w_down_scale":
+        return P("ep", "tp")
+    if k.endswith("_scale"):
+        return P("ep", None)
+    return P("ep", None, "tp")
 
 
 def materialise_slots(expert_weights, slot_expert, mesh, *, padded=None,
@@ -217,7 +229,18 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
     if token_mask is None:
         token_mask = jnp.ones(x.shape[:2], jnp.int32)
 
-    def local(x_loc, mask_loc, rw, wg, wu, wd, expert_slots, nrep):
+    # slot_w is either the native bank (w_gate/w_up/w_down) or the int8
+    # quantized bank with `*_scale` companions (kernels.quant layout);
+    # thread whichever keys are present through shard_map so a plan
+    # change — and a slot-dtype change — never forces a different trace
+    # shape for the same bank format
+    wkeys = tuple(k for k in ("w_gate", "w_gate_scale", "w_up",
+                              "w_up_scale", "w_down", "w_down_scale")
+                  if k in slot_w)
+    quantized = "w_up_scale" in wkeys
+
+    def local(x_loc, mask_loc, rw, expert_slots, nrep, *ws):
+        bank = dict(zip(wkeys, ws))
         b, s, d = x_loc.shape
         t = b * s
         xf = x_loc.reshape(t, d)
@@ -294,7 +317,14 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
         src = jnp.arange(ep, dtype=jnp.int32)[:, None]
         gs = jnp.max(jnp.where(recv_cnt > 0, src * cap + recv_cnt, 0),
                      axis=0)
-        out = KOPS.expert_ffn_impl(buf, wg, wu, wd, gs, impl)
+        if quantized:
+            out = KOPS.expert_ffn_quant_impl(
+                buf, bank["w_gate"], bank["w_gate_scale"], bank["w_up"],
+                bank["w_up_scale"], bank["w_down"], bank["w_down_scale"],
+                gs, impl)
+        else:
+            out = KOPS.expert_ffn_impl(buf, bank["w_gate"], bank["w_up"],
+                                       bank["w_down"], gs, impl)
         out = jax.lax.psum(out.astype(jnp.float32), "tp")  # f sharded on tp
         y = out.reshape(sd_, ep, cap, d).transpose(1, 0, 2, 3) \
             .reshape(ep, sd_ * cap, d)
@@ -323,14 +353,12 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
 
     fn = smap(
         local, mesh=mesh,
-        in_specs=(P("data", "ep", None), P("data", "ep"), P(),
-                  P("ep", None, "tp"), P("ep", None, "tp"),
-                  P("ep", "tp", None),
-                  P(), P()),
+        in_specs=(P("data", "ep", None), P("data", "ep"), P(), P(), P())
+        + tuple(_slot_spec(k) for k in wkeys),
         out_specs=(P("data", "ep", None), P(), P()))
     y, loads, dropped = fn(
-        x, token_mask, router_w, slot_w["w_gate"], slot_w["w_up"],
-        slot_w["w_down"], tables["expert_slots"], tables["nrep"])
+        x, token_mask, router_w, tables["expert_slots"], tables["nrep"],
+        *(slot_w[k] for k in wkeys))
     return y, {"expert_load": loads, "dropped": dropped,
                "aux_loss": jnp.asarray(0.0, jnp.float32)}
 
@@ -358,10 +386,15 @@ def moe_ep_ffn(moe_params, h, state, ctx: EPContext, cfg,
 
     `state`: {'expert_slots' (E, R_cap), 'nrep' (E,), 'w_gate'/'w_up'
     (S, D, F), 'w_down' (S, F, D)} for THIS layer, maintained by
-    ``serving.expert_runtime.ExpertRuntime``. Returns (y, metrics) in
-    the ``dispatch_moe`` metrics shape (expert_load, dropped,
-    aux_loss)."""
-    slot_w = {k: state[k] for k in ("w_gate", "w_up", "w_down")}
+    ``serving.expert_runtime.ExpertRuntime``. Under
+    ``cfg.moe.slot_dtype='int8'`` the weight leaves are int8 and carry
+    fp32 ``*_scale`` companions (kernels.quant layout) — they pass
+    through the same plumbing and select the dequantizing kernels.
+    Returns (y, metrics) in the ``dispatch_moe`` metrics shape
+    (expert_load, dropped, aux_loss)."""
+    slot_w = {k: state[k]
+              for k in ("w_gate", "w_gate_scale", "w_up", "w_up_scale",
+                        "w_down", "w_down_scale") if k in state}
     tables = {"expert_slots": state["expert_slots"], "nrep": state["nrep"]}
     return moe_ep_layer(
         h, moe_params["router"]["w_gate"], slot_w, tables, mesh=ctx.mesh,

@@ -50,6 +50,22 @@ def expert_ffn_impl(x, w_gate, w_up, w_down, group_sizes, impl: str):
     return moe_gmm.gmm(h, w_down, group_sizes, interpret=interp)
 
 
+def expert_ffn_quant_impl(x, wg_q, wg_s, wu_q, wu_s, wd_q, wd_s,
+                          group_sizes, impl: str):
+    """Un-jitted core of ``expert_ffn_quant``: the swiglu expert FFN
+    over an int8 slot bank + per-row fp32 scales, dequantized inside
+    the tile loop (usable under shard_map)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.expert_ffn_ref_quant(x, wg_q, wg_s, wu_q, wu_s,
+                                        wd_q, wd_s, group_sizes)
+    interp = impl == "pallas_interpret"
+    h = moe_gmm.fused_gate_up_quant(x, wg_q, wg_s, wu_q, wu_s,
+                                    group_sizes, interpret=interp)
+    return moe_gmm.gmm_quant(h, wd_q, wd_s, group_sizes,
+                             interpret=interp)
+
+
 def gmm_impl(x, w, group_sizes, impl: str):
     """Un-jitted core of ``gmm`` (usable under shard_map)."""
     impl = resolve_impl(impl)
@@ -57,6 +73,15 @@ def gmm_impl(x, w, group_sizes, impl: str):
         return ref.gmm_ref(x, w, group_sizes)
     return moe_gmm.gmm(x, w, group_sizes,
                        interpret=(impl == "pallas_interpret"))
+
+
+def gmm_quant_impl(x, wq, scale, group_sizes, impl: str):
+    """Un-jitted core of ``gmm_quant`` (usable under shard_map)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.gmm_ref_quant(x, wq, scale, group_sizes)
+    return moe_gmm.gmm_quant(x, wq, scale, group_sizes,
+                             interpret=(impl == "pallas_interpret"))
 
 
 def decode_attention_impl(q, k, v, kv_pos, kv_len, q_pos, *, window: int,
@@ -82,9 +107,26 @@ def expert_ffn(x, w_gate, w_up, w_down, group_sizes, *, impl: str = "auto"):
 
 
 @partial(jax.jit, static_argnames=("impl",))
+def expert_ffn_quant(x, wg_q, wg_s, wu_q, wu_s, wd_q, wd_s, group_sizes,
+                     *, impl: str = "auto"):
+    """Dequantizing capacity-layout SwiGLU expert FFN over an int8 bank
+    (values + per-row fp32 scales, repro.kernels.quant layout):
+    (E, C, D) -> (E, C, D) with the fp32 weights never stored in HBM."""
+    return expert_ffn_quant_impl(x, wg_q, wg_s, wu_q, wu_s, wd_q, wd_s,
+                                 group_sizes, impl)
+
+
+@partial(jax.jit, static_argnames=("impl",))
 def gmm(x, w, group_sizes, *, impl: str = "auto"):
     """Grouped matmul (E, C, D) x (E, D, F) -> (E, C, F)."""
     return gmm_impl(x, w, group_sizes, impl)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def gmm_quant(x, wq, scale, group_sizes, *, impl: str = "auto"):
+    """Dequantizing grouped matmul: (E, C, D) x int8 (E, D, F) with
+    per-row scales (E, D) -> (E, C, F)."""
+    return gmm_quant_impl(x, wq, scale, group_sizes, impl)
 
 
 @partial(jax.jit, static_argnames=("window", "impl"))

@@ -34,6 +34,27 @@ def gmm_ref(x, w, group_sizes=None):
     return y
 
 
+def _deq(q, scale):
+    """(..., R, C) int8 + (..., R) f32 -> f32 (kept local so ref stays a
+    one-file oracle; the storage format lives in repro.kernels.quant)."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def gmm_ref_quant(x, wq, scale, group_sizes=None):
+    """Dequantizing grouped matmul oracle: (E, C, D) @ deq(E, D, F) ->
+    (E, C, F). `scale` (E, D) sits on the contraction axis — exactly the
+    per-tile dequantisation the Pallas kernel applies in VMEM."""
+    return gmm_ref(x, _deq(wq, scale), group_sizes)
+
+
+def expert_ffn_ref_quant(x, wg_q, wg_s, wu_q, wu_s, wd_q, wd_s,
+                         group_sizes=None):
+    """Dequantizing capacity-layout expert FFN oracle (int8 bank + f32
+    per-row scales; see ``repro.kernels.quant`` for the layout)."""
+    return expert_ffn_ref(x, _deq(wg_q, wg_s), _deq(wu_q, wu_s),
+                          _deq(wd_q, wd_s), group_sizes)
+
+
 def topk_gating_ref(logits, top_k: int):
     """Router: softmax-over-topk weights + indices."""
     w, i = jax.lax.top_k(logits, top_k)

@@ -30,28 +30,53 @@ def main(argv=None):
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-moeless", action="store_true")
+    from repro.configs.base import SLOT_DTYPES
     from repro.kernels import IMPLS
     ap.add_argument("--impl", default="auto", choices=IMPLS,
                     help="kernel backend (repro.kernels.ops)")
+    ap.add_argument("--expert-runtime", default="off",
+                    choices=("off", "on"),
+                    help="execute replica plans on the EP slot data plane")
+    ap.add_argument("--slot-dtype", default="fp32", choices=SLOT_DTYPES,
+                    help="expert slot-bank storage format: 'int8' "
+                         "quantizes the banks (kernels.quant) so cold "
+                         "starts move ~4x fewer bytes")
     args = ap.parse_args(argv)
+
+    import dataclasses
 
     from repro.models import model as M
     from repro.serving.engine import MoElessController, ServingEngine
     from repro.serving.scheduler import GenRequest, SamplingParams
 
     cfg = get_config(args.arch, smoke=True)
+    if cfg.is_moe:
+        # cfg-level rewrite BEFORE the controller/engine exist, so the
+        # control plane's cost coefficients and the runtime's slot banks
+        # derive the same byte base
+        cfg = cfg.with_(moe=dataclasses.replace(
+            cfg.moe, slot_dtype=args.slot_dtype), impl=args.impl)
     key = jax.random.PRNGKey(args.seed)
     params = M.init_params(cfg, key)
     ctrl = None
     if cfg.is_moe and not args.no_moeless:
         ctrl = MoElessController(cfg, num_devices=args.devices)
+    if args.expert_runtime == "on" and ctrl is None:
+        raise SystemExit("--expert-runtime on needs an MoE arch with the "
+                         "MoEless control plane (drop --no-moeless)")
+    # the runtime executes the SESSION control plane's plans — attach the
+    # controller there instead of as the per-iteration engine controller
+    # (attaching it to both would step it twice per iteration)
+    session_ctrl = ctrl if args.expert_runtime == "on" else None
     engine = ServingEngine(cfg, params,
                            max_len=args.prompt_len + args.gen + 1,
-                           controller=ctrl, impl=args.impl)
+                           controller=None if session_ctrl else ctrl,
+                           impl=args.impl,
+                           expert_runtime=args.expert_runtime)
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
     rng = np.random.default_rng(args.seed)
-    engine.start(num_slots=args.slots)
+    engine.start(num_slots=args.slots, control=session_ctrl)
     handles = [engine.submit(GenRequest(
         rid=i, arrival=0.0,
         prompt=rng.integers(0, cfg.vocab_size, size=args.prompt_len,
@@ -74,6 +99,13 @@ def main(argv=None):
         print(f"  warm starts={sum(s.warm_starts for s in stats)} "
               f"cold={sum(s.cold_starts for s in stats)} "
               f"prewarmed={sum(s.prewarmed for s in stats)}")
+    if res.runtime is not None:
+        st = res.runtime.finalize(res.clock_s)
+        print(f"  expert runtime [slot_dtype={args.slot_dtype}]: "
+              f"c/w/p {st.cold_starts}/{st.warm_starts}/{st.prewarmed}, "
+              f"{st.transfers} transfers, "
+              f"{st.bytes_moved / 1e6:.1f}MB moved, "
+              f"{st.instance_seconds_gb:.3g} GB-s resident")
     print("sample continuations:",
           np.asarray([h.tokens[:8] for h in handles[:2]]))
 

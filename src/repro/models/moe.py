@@ -70,12 +70,28 @@ def experts_ffn(p, x, act: str, *, group_sizes=None, impl: str = "ref"):
     """x: (E, N, D) -> (E, N, D), grouped per-expert FFN through the
     kernels.ops backend selector. `group_sizes` (E,) marks rows beyond
     it as padding (outputs zeroed; the Pallas backends also skip whole
-    row-tiles there). None => all rows active."""
+    row-tiles there). None => all rows active.
+
+    `p` may be a native-dtype bank ({w_gate, w_up, w_down}) or an int8
+    quantized slot bank carrying `*_scale` companions
+    (repro.kernels.quant layout, cfg.moe.slot_dtype='int8'); the
+    quantized form routes through the dequantizing kernel family so the
+    fp32 weights never materialise in HBM."""
     # lazy import: consumers of the jnp-only model paths never pull in
     # pallas-tpu (see kernels._compat)
     from repro.kernels import ops as OPS
     if group_sizes is None:
         group_sizes = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+    if "w_up_scale" in p:
+        if act == "swiglu":
+            return OPS.expert_ffn_quant_impl(
+                x, p["w_gate"], p["w_gate_scale"], p["w_up"],
+                p["w_up_scale"], p["w_down"], p["w_down_scale"],
+                group_sizes, impl)
+        h = jax.nn.gelu(OPS.gmm_quant_impl(x, p["w_up"], p["w_up_scale"],
+                                           group_sizes, impl))
+        return OPS.gmm_quant_impl(h, p["w_down"], p["w_down_scale"],
+                                  group_sizes, impl)
     if act == "swiglu":
         return OPS.expert_ffn_impl(x, p["w_gate"], p["w_up"], p["w_down"],
                                    group_sizes, impl)

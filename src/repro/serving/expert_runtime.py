@@ -29,7 +29,12 @@ Metering: cold/warm/prewarmed counts and GB-seconds of residency follow
 the SAME classification the analytic pool applies (same plans, same
 timestamps, same lead/exec times ⇒ equal counts — a tested invariant),
 while ``bytes_moved`` counts the weight bytes actually written into
-slot banks on this host.
+slot banks on this host. Both byte bases honour
+``cfg.moe.slot_dtype``: with ``'int8'`` the banks hold symmetric
+per-row-scale quantized experts (``repro.kernels.quant``), so every
+cold start moves ~4x fewer bytes and every GB-s of residency bills
+~4x cheaper — and ``_slot_row_bytes`` stays exactly equal to
+``costmodel.param_bytes(cfg)``, preserving runtime==analytic parity.
 
 Slot geometry: the plan's `num_devices` logical devices each own
 `slots_per_device` logical slots, flattened to ``total_slots`` physical
@@ -54,6 +59,7 @@ from repro.core.control import (MOELESS_EXEC_TIME, PlanEvent,
                                 default_slots_per_device)
 from repro.core.costmodel import V5E, Hardware, derive_coeffs
 from repro.distributed.ep import EPContext
+from repro.kernels import quant as QT
 from repro.models import transformer as T
 
 
@@ -159,22 +165,35 @@ class ExpertRuntime:
 
         # padded per-expert weight banks, ONE pad at construction
         # (satellite fix: materialisation must not re-pad per call):
-        # leaves (P, E+1, D, F) / (P, E+1, F, D)
+        # leaves (P, E+1, D, F) / (P, E+1, F, D). Under
+        # cfg.moe.slot_dtype='int8' the padded bank is QUANTIZED once
+        # here (kernels.quant: int8 values + fp32 per-row scales) and
+        # every later slot materialisation scatters the ~4x smaller
+        # rows — cold starts move quantized bytes, never fp32 bytes.
+        slot_dtype = getattr(cfg.moe, "slot_dtype", "fp32")
+        if slot_dtype not in ("fp32", "int8"):
+            raise ValueError(f"unknown slot_dtype {slot_dtype!r}")
         self.padded = {}
         self.banks = {}
         self._slot_row_bytes = {}
         for j in self.moe_positions:
             bank = params["layers"][j]["moe"]["experts"]
-            self.padded[j] = {
+            padded = {
                 k: jnp.concatenate([w, jnp.zeros_like(w[:, :1])], axis=1)
                 for k, w in bank.items()}
+            if slot_dtype == "int8":
+                padded = QT.quantize_expert_bank(padded)
+            self.padded[j] = padded
             self.banks[j] = {
                 k: jnp.zeros((self.periods, self.total_slots) + w.shape[2:],
                              w.dtype)
-                for k, w in bank.items()}
+                for k, w in padded.items()}
+            # bytes of ONE slot row as stored — by construction equal to
+            # costmodel.param_bytes(cfg) (== coeffs.expert_bytes), the
+            # runtime-vs-analytic metering contract
             self._slot_row_bytes[j] = float(sum(
                 int(np.prod(w.shape[2:])) * w.dtype.itemsize
-                for w in bank.values()))
+                for w in padded.values()))
 
         # host-side slot state machine, per MoE layer l = p*mpp + m
         lm, s = self.n_layers, self.total_slots

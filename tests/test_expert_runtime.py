@@ -286,6 +286,98 @@ class TestEngineParity:
             ServingEngine(cfg, params, expert_runtime="maybe")
 
 
+# ---------------------------------------- quantized slot banks (int8)
+
+
+class TestQuantizedSlots:
+    """cfg.moe.slot_dtype='int8': the runtime's banks store int8 values
+    + fp32 per-row scales, every byte meter shrinks to
+    ``param_bytes(cfg)`` exactly, and runtime==analytic parity holds
+    bit-for-bit on the smaller byte base."""
+
+    def _cfg8(self, cfg):
+        return cfg.with_(moe=dataclasses.replace(cfg.moe,
+                                                 slot_dtype="int8"))
+
+    def test_banks_are_quantized(self, cfg_params):
+        cfg, params = cfg_params
+        rt = ExpertRuntime(self._cfg8(cfg), params, num_devices=4)
+        for j in rt.moe_positions:
+            bank = rt.banks[j]
+            for k in ("w_gate", "w_up", "w_down"):
+                assert bank[k].dtype == jnp.int8
+                assert bank[k + "_scale"].dtype == jnp.float32
+                # scale sits on the contraction axis of its partner
+                assert bank[k + "_scale"].shape == bank[k].shape[:-1]
+
+    def test_runtime_matches_analytic_pool_exactly_int8(self, cfg_params):
+        """The PR-4 exactness contract survives quantization: same plan
+        sequence => identical lifecycle counts, GB-seconds equal to the
+        analytic pool on the int8 byte base, and bytes_moved ==
+        transfers * param_bytes(cfg)."""
+        from repro.core.costmodel import param_bytes
+
+        cfg, params = cfg_params
+        cfg8 = self._cfg8(cfg)
+        coeffs = derive_coeffs(cfg8)
+        assert coeffs.expert_bytes == param_bytes(cfg8)
+        keep_alive = 2.0
+        rt = ExpertRuntime(cfg8, params, num_devices=4,
+                           slots_per_device=3, keep_alive=keep_alive,
+                           coeffs=coeffs)
+        for j in rt.moe_positions:
+            assert rt._slot_row_bytes[j] == coeffs.expert_bytes
+        pools = [ServerlessExpertPool(expert_bytes=coeffs.expert_bytes,
+                                      keep_alive=keep_alive)
+                 for _ in range(rt.n_layers)]
+        assert rt.cold_start_latency() == pools[0].cold_start_latency()
+        cs = rt.cold_start_latency()
+        rng = np.random.default_rng(11)
+        prev = [None] * rt.n_layers
+        times = [0.0, 0.5, 8.0, 8.5]
+        leads = [0.0, 2 * cs, cs / 2, 0.0]
+        for t, lead in zip(times, leads):
+            events = []
+            for l in range(rt.n_layers):
+                loads = rng.uniform(1.0, 100.0, size=rt.num_experts)
+                plan = place_layer(
+                    loads, scale_layer(loads, max_total_replicas=8), 4,
+                    prev=prev[l], alive=set(pools[l].instances),
+                    max_replicas_per_device=3)
+                prev[l] = plan
+                pools[l].commit(plan, t, MOELESS_EXEC_TIME, lead)
+                events.append(PlanEvent(plan=plan, served=plan,
+                                        lead_time=lead,
+                                        exec_time=MOELESS_EXEC_TIME,
+                                        serverless=True))
+            rt.apply(t, events)
+        pc = (sum(p.stats.cold_starts for p in pools),
+              sum(p.stats.warm_starts for p in pools),
+              sum(p.stats.prewarmed for p in pools))
+        assert rt.stats.counts() == pc
+        assert rt.stats.bytes_moved \
+            == rt.stats.transfers * coeffs.expert_bytes
+        end = times[-1] + 1.0
+        gb_pool = sum(p.finalize(end).instance_seconds_gb for p in pools)
+        gb_rt = rt.finalize(end).instance_seconds_gb
+        assert gb_rt == pytest.approx(gb_pool, rel=1e-9)
+        assert gb_rt > 0
+
+    def test_int8_moves_at_most_030x_of_fp32(self, cfg_params):
+        """The headline perf contract: the same bootstrap load moves
+        <= 0.30x the bytes (and bills <= 0.30x the cold-start seconds)
+        with int8 slot banks vs fp32 — on the float32 smoke config the
+        exact ratio is (3df + (2d+f)*4) / (3df*4) ~ 0.253."""
+        cfg, params = cfg_params
+        rt32 = ExpertRuntime(cfg, params, num_devices=4)
+        rt8 = ExpertRuntime(self._cfg8(cfg), params, num_devices=4)
+        r32 = rt32.bootstrap()
+        r8 = rt8.bootstrap()
+        assert r8.transfers == r32.transfers
+        assert 0 < r8.bytes_moved <= 0.30 * r32.bytes_moved
+        assert rt8.cold_start_latency() < rt32.cold_start_latency()
+
+
 # ------------------------------------- satellite: plan_to_tables spill
 
 

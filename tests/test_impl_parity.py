@@ -11,7 +11,15 @@ capacity not a multiple of the 128 kernel block, empty experts
 Property tests (hypothesis, optional dep): token-permutation
 equivariance of the dispatch path and replica-count invariance of the
 EP combined outputs.
+
+Quantized lane (cfg.moe.slot_dtype='int8', kernels.quant): the
+dequantizing kernel family must be ref==interpret EXACT, match the
+fp32 kernels within the stated tolerance (per-row int8 rounding:
+|w - deq(q)| <= max|row|/254, ~0.4% of the row amax), and leave greedy
+tokens unchanged on the engine smoke config.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -22,6 +30,7 @@ from repro.distributed import ep as EP
 from repro.core.placer import place_layer
 from repro.core.plan import static_plan
 from repro.core.scaler import scale_layer
+from repro.kernels import quant as QT
 from repro.models import model as M
 from repro.models import moe as MOE
 
@@ -225,6 +234,135 @@ def test_serve_trace_generates_identical_tokens_across_impls():
     toks_pi = run("pallas_interpret")
     assert toks_ref == toks_pi
     assert all(len(t) > 0 for t in toks_ref.values())
+
+
+# ------------------------------------------------------- quantized lane
+
+
+def _quantized(p):
+    return {"router": p["router"],
+            "experts": QT.quantize_expert_bank(p["experts"])}
+
+
+def test_quantize_rows_error_bound():
+    """Symmetric per-row int8: |w - deq(q)| <= amax_row / 254 (half a
+    quantization step), exactly zero for all-zero rows — the tolerance
+    contract every downstream allclose leans on."""
+    w = jax.random.normal(jax.random.fold_in(KEY, 20), (3, 8, 16),
+                          jnp.float32)
+    w = w.at[1, 3].set(0.0)
+    q, s = QT.quantize_rows(w)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    deq = QT.dequantize_rows(q, s)
+    amax = np.asarray(jnp.max(jnp.abs(w), axis=-1))
+    err = np.asarray(jnp.abs(deq - w))
+    assert (err <= amax[..., None] / 254 + 1e-7).all()
+    np.testing.assert_array_equal(np.asarray(deq[1, 3]), 0.0)
+    # idempotence: re-quantizing a quantized bank is the identity
+    bank = {"w_up": w}
+    qb = QT.quantize_expert_bank(bank)
+    assert QT.quantize_expert_bank(qb) is qb
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_quant_backends_exact_ref_vs_interpret(case):
+    """The dequantizing kernels are EXACTLY equal between 'ref' and
+    'pallas_interpret' under the same capacity dispatch (both dequantize
+    to f32 then matmul; single contraction tile at these shapes)."""
+    p, x, e, k, cf = _mk_case(case, 3)
+    pq = _quantized(p)
+    y_ref, m_ref = MOE.dispatch_moe(pq, x, top_k=k, num_experts=e,
+                                    capacity_factor=cf, impl="ref")
+    y_pi, m_pi = MOE.dispatch_moe(pq, x, top_k=k, num_experts=e,
+                                  capacity_factor=cf,
+                                  impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pi),
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(m_ref["expert_load"]),
+                                  np.asarray(m_pi["expert_load"]))
+    assert float(m_ref["dropped"]) == float(m_pi["dropped"])
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_quant_dispatch_close_to_fp32(case):
+    """Quantized-vs-fp32 expert FFN through the capacity dispatch:
+    same routing (the router is NOT quantized => identical histograms
+    and drops), outputs within the int8 rounding tolerance."""
+    p, x, e, k, cf = _mk_case(case, 4)
+    y, m = MOE.dispatch_moe(p, x, top_k=k, num_experts=e,
+                            capacity_factor=cf, impl="ref")
+    yq, mq = MOE.dispatch_moe(_quantized(p), x, top_k=k, num_experts=e,
+                              capacity_factor=cf, impl="ref")
+    np.testing.assert_array_equal(np.asarray(m["expert_load"]),
+                                  np.asarray(mq["expert_load"]))
+    assert float(m["dropped"]) == float(mq["dropped"])
+    np.testing.assert_allclose(np.asarray(yq), np.asarray(y), atol=5e-2)
+
+
+def test_quant_ep_path_matches_fp32():
+    """The EP shard_map path accepts the quantized slot bank through the
+    same plumbing (scale leaves shard with their weights) and matches
+    the fp32 EP output within tolerance, with identical loads."""
+    e, k = 4, 2
+    p = _params(e, key=jax.random.fold_in(KEY, 21))
+    x = jax.random.normal(jax.random.fold_in(KEY, 22), (2, 6, D),
+                          jnp.float32)
+    mesh = jax.make_mesh((1, 1, 1), ("data", "ep", "tp"))
+    spd = 2 * e
+    tables = EP.plan_to_tables(static_plan(e, 1), ep=1,
+                               slots_per_device=spd)
+    outs = {}
+    for name, bank in (("fp32", p["experts"]),
+                       ("int8", QT.quantize_expert_bank(p["experts"]))):
+        with mesh:
+            slot_w = EP.materialise_slots(bank, tables["slot_expert"],
+                                          mesh)
+            y, m = EP.moe_ep_layer(
+                x, p["router"]["w_gate"], slot_w, tables, mesh=mesh,
+                num_experts=e, top_k=k, slots_per_device=spd,
+                capacity_factor=float(e), impl="ref")
+        outs[name] = (np.asarray(y, np.float32),
+                      np.asarray(m["expert_load"]))
+    np.testing.assert_array_equal(outs["fp32"][1], outs["int8"][1])
+    np.testing.assert_allclose(outs["int8"][0], outs["fp32"][0],
+                               atol=5e-2)
+
+
+def test_engine_greedy_tokens_stable_under_int8_slots():
+    """Acceptance: the full serving engine with the expert runtime ON
+    emits IDENTICAL greedy tokens whether the slot banks are fp32 or
+    int8 — the int8 rounding perturbation stays below the greedy argmax
+    margins of the smoke config."""
+    from repro.serving.engine import MoElessController, ServingEngine
+    from repro.serving.scheduler import GenRequest
+
+    base = get_config("mixtral-8x7b", smoke=True).with_(dtype="float32")
+    params = M.init_params(base, jax.random.fold_in(KEY, 12))
+
+    def run(slot_dtype):
+        cfg = base.with_(moe=dataclasses.replace(
+            base.moe, slot_dtype=slot_dtype))
+        rng = np.random.default_rng(0)
+        reqs = [GenRequest(rid=i, arrival=0.0,
+                           prompt=rng.integers(0, cfg.vocab_size, size=6,
+                                               dtype=np.int32),
+                           max_new_tokens=4) for i in range(2)]
+        engine = ServingEngine(cfg, params, max_len=24,
+                               expert_runtime="on")
+        ctrl = MoElessController(cfg, num_devices=4)
+        res = engine.serve(reqs, num_slots=2, control=ctrl)
+        assert len(res.records) == len(reqs)
+        st = res.runtime.finalize(res.clock_s)
+        return {r.rid: list(r.tokens) for r in reqs}, st
+
+    toks32, st32 = run("fp32")
+    toks8, st8 = run("int8")
+    assert toks32 == toks8
+    assert all(len(t) > 0 for t in toks32.values())
+    # the headline byte contract rides along: int8 cold starts move
+    # <= 0.30x the fp32 bytes
+    assert st8.transfers == st32.transfers
+    assert st8.bytes_moved <= 0.30 * st32.bytes_moved
 
 
 # ------------------------------------------------------------ properties
