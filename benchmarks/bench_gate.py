@@ -29,8 +29,14 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
+
+# the serving suite's multi-rank section runs on a forced host mesh —
+# must be in the env before the first jax backend init
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
 
 _DIR = pathlib.Path(__file__).parent
 BASELINES = {

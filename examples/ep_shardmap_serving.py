@@ -22,11 +22,12 @@ from repro.core.placer import place_layer     # noqa: E402
 from repro.core.plan import static_plan       # noqa: E402
 from repro.core.scaler import scale_layer     # noqa: E402
 from repro.distributed import ep as EP        # noqa: E402
+from repro.launch.mesh import make_serving_mesh  # noqa: E402
 
 
 def main():
     E, D, F, TOPK = 4, 64, 128, 2
-    mesh = jax.make_mesh((2, 2, 2), ("data", "ep", "tp"))
+    mesh = make_serving_mesh(8, data=2, ep=2, tp=2)
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 5)
     # biased router -> skewed expert popularity, like paper Fig. 1

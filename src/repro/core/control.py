@@ -349,9 +349,22 @@ class MoElessController(ControlPlane):
         subset) plans the meter served with."""
         return [self.bal.prev[l] for l in range(len(self.bal.prev))]
 
-    def plan_tables(self, layer: int):
-        """Slot tables for the shard_map EP layer (distributed/ep.py)."""
+    def plan_tables(self, layer: int, ep: int | None = None):
+        """Slot tables for the shard_map EP layer (distributed/ep.py).
+
+        `ep` overrides the mesh's EP degree (default: the gcd
+        factorisation of experts x devices). The plan's logical devices
+        are projected onto the ep ranks with the explicit block mapping
+        (``distributed.ep.device_rank``), and each rank's slot count is
+        the total logical slot budget split over ranks — the same
+        geometry ``serving.expert_runtime.ExpertRuntime`` executes, so
+        analytic tables and runtime tables describe one layout."""
         from repro.distributed.ep import ep_factorisation, plan_to_tables
-        ep, _ = ep_factorisation(self.cfg.moe.num_experts, self.num_devices)
+        if ep is None:
+            ep, _ = ep_factorisation(self.cfg.moe.num_experts,
+                                     self.num_devices)
+        per_rank = -(-self.num_devices * self.slots_per_device
+                     // ep)
         return plan_to_tables(self.plans[layer], ep=ep,
-                              slots_per_device=self.slots_per_device)
+                              slots_per_device=per_rank,
+                              num_devices=self.num_devices)

@@ -64,8 +64,29 @@ def make_ep_mesh(num_experts: int, *, data: int = 16, model: int = 16):
 # ------------------------------------------------------------ slot tables
 
 
-def plan_to_tables(plan, *, ep: int, slots_per_device: int):
+def device_rank(g: int, *, num_devices: int, ep: int) -> int:
+    """EP mesh rank owning logical control-plane device `g`. The control
+    plane plans over `num_devices` logical devices; the data plane runs
+    on `ep` mesh ranks. Contiguous blocks of num_devices // ep logical
+    devices map to one rank, so a plan's locality structure (ring
+    neighbourhoods) survives the projection. Requires ep | num_devices —
+    the controller's `ep_factorisation` (gcd) always satisfies this."""
+    if num_devices % ep:
+        raise ValueError(
+            f"device_rank: num_devices={num_devices} is not a multiple "
+            f"of ep={ep}; no block mapping of logical devices onto mesh "
+            f"ranks exists")
+    return (g % num_devices) // (num_devices // ep)
+
+
+def plan_to_tables(plan, *, ep: int, slots_per_device: int,
+                   num_devices: int | None = None):
     """LayerPlan -> routing tables (all shapes static).
+
+    `num_devices` maps the plan's LOGICAL devices onto the `ep` mesh
+    ranks explicitly via ``device_rank`` (block mapping). Without it the
+    legacy `g % ep` fold is used — correct only when the plan already
+    places on mesh ranks (num_devices == ep).
 
     A plan that asks for more replicas on a rank than `slots_per_device`
     (reachable: the Scaler is not told the per-rank slot cap) degrades
@@ -91,7 +112,10 @@ def plan_to_tables(plan, *, ep: int, slots_per_device: int):
     spilled = 0
     for e in range(e_count):
         for r, g in enumerate(plan.placement[e]):
-            g = g % ep
+            if num_devices is not None:
+                g = device_rank(int(g), num_devices=num_devices, ep=ep)
+            else:
+                g = g % ep
             if used[g] >= slots_per_device:
                 # nearest rank (ring distance, either direction) with a
                 # free slot
@@ -187,30 +211,53 @@ def materialise_slots(expert_weights, slot_expert, mesh, *, padded=None,
 def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
                  top_k: int, slots_per_device: int,
                  capacity_factor: float, act: str = "swiglu",
-                 impl: str = "auto", token_mask=None):
-    """x: (B, S, D) sharded P('data', 'ep', None) (replicated over 'tp').
+                 impl: str = "auto", token_mask=None,
+                 pad_rows: int = 0):
+    """x: (B, S, D), batch sharded P(('data', 'ep'), None, None)
+    (replicated over 'tp'); B must be a multiple of data*ep.
     slot_w: dict of slot banks from materialise_slots.
     `impl` selects the grouped-FFN kernel backend for the per-rank slot
     compute (kernels.ops: auto | pallas | pallas_interpret | ref).
     `token_mask` (B, S) excludes tokens (inactive continuous-batching
     slots) from the expert-load and dropped metrics; compute is
     unaffected.
+    `pad_rows` (static) marks the LAST pad_rows rows of the global
+    batch as mesh-padding artifacts (the engine pads B up to a multiple
+    of data*ep): they are excluded from the capacity formula AND made
+    unroutable, so a padded multi-rank batch keeps/drops exactly the
+    tokens its unpadded 1-device equivalent would. This is distinct
+    from `token_mask`: inactive continuous-batching slots are REAL
+    batch rows that occupy capacity on both data planes (metrics-only
+    exclusion), while pad rows do not exist on the reference mesh at
+    all.
 
     Capacity / drop semantics are DROP-EQUIVALENT to
-    ``models.moe.dispatch_moe``: every replica slot gets the same
-    per-expert capacity ``ceil(capacity_factor * top_k * T / E)`` (T =
-    tokens on this shard — the analogue of one dispatch group per
-    shard; equivalence is exact when the dispatch path runs one group
-    per shard, the serving configuration — extra dispatch groups
-    (> 2048 tokens, ``transformer._moe_groups``) divide dispatch
-    capacity per group and the counts can diverge), assignments take
-    capacity in the same GShard priority order (lower k-slots first,
-    then token order), and overflow is COUNTED, not silently zeroed.
-    With single-replica plans the kept token set is identical to the
-    capacity dispatch; extra replicas only ADD capacity, so a token the
-    dispatch path keeps is always kept here.
+    ``models.moe.dispatch_moe`` and MESH-INVARIANT: every replica slot
+    gets the per-expert capacity ``ceil(capacity_factor * top_k * T /
+    E)`` computed from the GLOBAL logical token count
+    T = (B - pad_rows)*S (equivalence with
+    the dispatch path is exact when it runs one group — extra dispatch
+    groups (> 2048 tokens, ``transformer._moe_groups``) divide dispatch
+    capacity per group and the counts can diverge). Each assignment's
+    priority position within its slot is its GLOBAL GShard rank (lower
+    k-slots everywhere first, then global token order), computed from
+    all-gathered per-(k, slot) shard counts, so the kept token set is
+    IDENTICAL on a (1,1,1) and a (1,4,1) mesh — keep/drop never depends
+    on how tokens landed on shards. Overflow is COUNTED, not silently
+    zeroed. With single-replica plans the kept set equals the capacity
+    dispatch; extra replicas only ADD capacity, so a token the dispatch
+    path keeps is always kept here.
     `capacity_factor` has no default on purpose — thread
     ``cfg.moe.capacity_factor`` so both data planes share one value.
+
+    Tokens are sharded P(('data','ep')) over the BATCH axis (B must be
+    a multiple of data*ep — the serving engine pads batches to this
+    multiple), so each shard owns a contiguous global token range and
+    shard-major order IS global token order. Per-slot send/recv blocks
+    are sized to the full global capacity: the budget is global, so a
+    single shard can legally hold up to `cap` survivors of one slot
+    (worst-case burst); the a2a'd kept counts mark real extents so the
+    kernel backends still skip the zero tail.
 
     Returns (y, metrics) with y sharded like x and metrics in the
     ``dispatch_moe`` shape: ``expert_load`` (E,) and ``dropped``
@@ -220,8 +267,21 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
     # pallas-tpu (see kernels._compat)
     from repro.kernels import ops as KOPS
     ep = mesh.shape["ep"]
+    n_data = mesh.shape["data"]
+    n_shards = n_data * ep
     sd_ = slots_per_device
     n_slots = ep * sd_
+    if x.shape[0] % n_shards:
+        raise ValueError(
+            f"moe_ep_layer: batch {x.shape[0]} is not a multiple of "
+            f"data*ep = {n_shards}; pad the batch (the serving engine "
+            f"does this automatically)")
+    if not 0 <= pad_rows < x.shape[0]:
+        raise ValueError(f"pad_rows={pad_rows} outside [0, B={x.shape[0]})")
+    # mesh-invariant capacity: the formula sees the LOGICAL token count
+    # (pad rows are artifacts of this mesh's shard multiple, absent on
+    # the 1-device reference)
+    logical_t = (x.shape[0] - pad_rows) * x.shape[1]
     impl = KOPS.resolve_impl(impl)   # fail fast on unknown backends
     # pallas_call has no replication rule, so the Pallas backends need
     # the shard_map checker off; 'ref' keeps the default trace-time check
@@ -259,12 +319,25 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
                         jnp.maximum(nrep_t, 1))
         slot = expert_slots[top_i, r_idx]                    # (t, k)
         routable = (nrep_t > 0) & (slot >= 0)
+        me = jax.lax.axis_index("data") * ep + jax.lax.axis_index("ep")
+        if pad_rows:
+            # mesh-padding rows (the LAST pad_rows of the global batch)
+            # must never consume capacity — on the 1-device reference
+            # they do not exist. Shards own contiguous row ranges, so
+            # this shard's global rows are [me*b, (me+1)*b).
+            real_row = (me * b + jnp.arange(b, dtype=jnp.int32)
+                        < b * n_shards - pad_rows)           # (b,)
+            routable = routable & jnp.repeat(real_row, s)[:, None]
         slot = jnp.where(routable, slot, 0)
 
-        # drop-equivalent capacity: dispatch_moe's per-expert formula,
-        # applied per SLOT (each replica carries the full per-expert
-        # capacity, so replication only raises headroom)
-        cap = max(1, math.ceil(capacity_factor * top_k * t / num_experts))
+        # drop-equivalent capacity: dispatch_moe's per-expert formula on
+        # the GLOBAL LOGICAL token count (pad rows excluded), applied
+        # per SLOT (each replica carries the full per-expert capacity,
+        # so replication only raises headroom). A local-count capacity
+        # would make keep/drop depend on the mesh factorisation — the
+        # latent 1-device-only bug this layer used to have.
+        cap = max(1, math.ceil(capacity_factor * top_k * logical_t
+                               / num_experts))
 
         # GShard priority order: flatten k-major (all k=0 assignments in
         # token order, then k=1, ...) so position-in-slot matches
@@ -283,7 +356,36 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
              jnp.cumsum(counts).astype(jnp.int32)[:-1]])
         pos = jnp.arange(t * top_k, dtype=jnp.int32) \
             - starts[jnp.clip(ssl, 0, n_slots - 1)]
-        keep = (pos < cap) & (ssl < n_slots)
+
+        # global GShard rank: each sorted assignment's priority position
+        # within its slot across ALL shards. Shards hold contiguous
+        # global token ranges (P(('data','ep')) batch sharding), so the
+        # global order within a slot is (k, shard, local order). Tiny
+        # per-(k, slot) count tables are all-gathered; the rank is
+        #   prior-k total everywhere + same-k counts of earlier shards
+        #   + local position within (k, slot).
+        # On one shard this reduces exactly to `pos`.
+        cnt_km = jax.vmap(
+            lambda sl, rt: jnp.bincount(
+                jnp.where(rt, sl, n_slots),
+                length=n_slots + 1)[:n_slots])(
+            slot.T, routable.T).astype(jnp.int32)            # (k, S)
+        allc = jax.lax.all_gather(
+            jax.lax.all_gather(cnt_km, "ep"), "data") \
+            .reshape(n_shards, top_k, n_slots)               # (sh, k, S)
+        tot = allc.sum(0)                                    # (k, S)
+        prek = jnp.cumsum(tot, 0) - tot                      # excl k-cumsum
+        before = jnp.sum(
+            allc * (jnp.arange(n_shards)[:, None, None] < me), 0)
+        prelk = jnp.cumsum(cnt_km, 0) - cnt_km               # local excl
+        sk = jnp.repeat(jnp.arange(top_k, dtype=jnp.int32), t)[forder]
+        mclip = jnp.clip(ssl, 0, n_slots - 1)
+        gpos = pos + (prek + before - prelk)[sk, mclip]
+        # gpos >= pos and gpos is strictly increasing along each slot's
+        # local order, so keep is a prefix of the slot group: kept rows
+        # stay contiguous at local positions [0, kept-count) and always
+        # fit the cap-row block below.
+        keep = (gpos < cap) & (ssl < n_slots)
 
         # pack send buffers: destination rank = slot // sd_, and the
         # buffer layout itself encodes the slot — rows [m*cap, (m+1)*cap)
@@ -307,12 +409,16 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
         # are zero vectors and the FFN maps them to zero. Each sender
         # also all-to-alls its kept per-slot counts (a tiny int array)
         # so group_sizes can mark each slot's occupied extent and the
-        # kernel backends skip the zero tail tiles — exact occupancy on
-        # a 1-rank mesh (ep=1), the furthest occupied source block
-        # otherwise (every row past it is zero).
+        # kernel backends skip the zero tail tiles. The counts are the
+        # TRUE kept counts from `keep` (not min(local count, cap) — the
+        # global budget means another shard may have consumed capacity,
+        # and undercounting would let `gs` cut off an occupied source
+        # block at ep > 1).
         buf = recv.reshape(ep, sd_, cap, d).transpose(1, 0, 2, 3) \
             .reshape(sd_, ep * cap, d)
-        kc = jnp.minimum(counts, cap).astype(jnp.int32).reshape(ep, sd_)
+        kc = jnp.bincount(jnp.where(keep, ssl, n_slots),
+                          length=n_slots + 1)[:n_slots] \
+            .astype(jnp.int32).reshape(ep, sd_)
         recv_cnt = jax.lax.all_to_all(kc, "ep", 0, 0)       # (src, sd_)
         src = jnp.arange(ep, dtype=jnp.int32)[:, None]
         gs = jnp.max(jnp.where(recv_cnt > 0, src * cap + recv_cnt, 0),
@@ -353,9 +459,10 @@ def moe_ep_layer(x, router_w, slot_w, tables, *, mesh, num_experts: int,
 
     fn = smap(
         local, mesh=mesh,
-        in_specs=(P("data", "ep", None), P("data", "ep"), P(), P(), P())
+        in_specs=(P(("data", "ep"), None, None), P(("data", "ep"), None),
+                  P(), P(), P())
         + tuple(_slot_spec(k) for k in wkeys),
-        out_specs=(P("data", "ep", None), P(), P()))
+        out_specs=(P(("data", "ep"), None, None), P(), P()))
     y, loads, dropped = fn(
         x, token_mask, router_w, tables["expert_slots"], tables["nrep"],
         *(slot_w[k] for k in wkeys))
@@ -376,6 +483,14 @@ class EPContext:
     mesh: object
     slots_per_device: int          # PHYSICAL slots per EP mesh rank
     capacity_factor: float
+    # trailing rows of the batch that are mesh-padding artifacts (the
+    # engine pads B to a multiple of data*ep); they neither consume nor
+    # contribute capacity, so keep/drop matches the unpadded 1-device
+    # batch bit for bit. Differs per phase (prefill pads 1 -> data*ep,
+    # decode pads num_slots -> the KV pool's row multiple), so the
+    # engine closes a per-phase replace() of the runtime's ctx over
+    # each jitted step.
+    pad_rows: int = 0
 
 
 def moe_ep_ffn(moe_params, h, state, ctx: EPContext, cfg,
@@ -401,4 +516,4 @@ def moe_ep_ffn(moe_params, h, state, ctx: EPContext, cfg,
         num_experts=cfg.moe.num_experts, top_k=cfg.moe.top_k,
         slots_per_device=ctx.slots_per_device,
         capacity_factor=ctx.capacity_factor, act=cfg.act, impl=cfg.impl,
-        token_mask=token_mask)
+        token_mask=token_mask, pad_rows=ctx.pad_rows)

@@ -23,9 +23,42 @@ def make_production_mesh(*, multi_pod: bool = False, shape=None):
 
 
 def make_host_mesh():
-    """Single-process mesh over whatever devices exist (tests/examples)."""
+    """Single-process mesh over whatever devices exist (tests/examples).
+
+    NOTE: this is the ("data", "model") NON-expert mesh. The EP slot
+    data plane (distributed.ep / serving with --expert-runtime on)
+    requires the ("data", "ep", "tp") axes — use ``make_serving_mesh``;
+    a ("data", "model") mesh cannot run `moe_ep_layer` at all."""
     n = len(jax.devices())
     return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_serving_mesh(devices: int | None = None, *, ep: int | None = None,
+                      tp: int = 1, data: int = 1):
+    """("data", "ep", "tp") mesh for the EP serving hot path.
+
+    `devices` caps how many local devices to use (None = all; run with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N to force a
+    multi-device CPU host). `ep` defaults to devices // (data * tp).
+    The factorisation must use exactly data*ep*tp devices."""
+    n = len(jax.devices()) if devices is None else devices
+    avail = len(jax.devices())
+    if n > avail:
+        raise ValueError(
+            f"make_serving_mesh: {n} devices requested but only {avail} "
+            "present — set XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={n} before the first jax call to force host devices")
+    if ep is None:
+        if n % (data * tp):
+            raise ValueError(
+                f"make_serving_mesh: {n} devices do not factor into "
+                f"data={data} x ep x tp={tp}")
+        ep = n // (data * tp)
+    if data * ep * tp != n:
+        raise ValueError(
+            f"make_serving_mesh: data={data} x ep={ep} x tp={tp} "
+            f"!= {n} devices")
+    return jax.make_mesh((data, ep, tp), ("data", "ep", "tp"))
 
 
 def dp_axes(mesh) -> tuple:

@@ -41,7 +41,23 @@ def main(argv=None):
                     help="expert slot-bank storage format: 'int8' "
                          "quantizes the banks (kernels.quant) so cold "
                          "starts move ~4x fewer bytes")
+    ap.add_argument("--ep", type=int, default=0,
+                    help="EP mesh degree for the slot data plane "
+                         "(0 = 1-device mesh)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree inside each expert")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N XLA host-platform devices (CPU multi-"
+                         "rank serving without real accelerators)")
     args = ap.parse_args(argv)
+
+    if args.host_devices:
+        # must land before the first jax backend init in this process
+        import os
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count="
+              f"{args.host_devices}").strip()
 
     import dataclasses
 
@@ -68,11 +84,21 @@ def main(argv=None):
     # controller there instead of as the per-iteration engine controller
     # (attaching it to both would step it twice per iteration)
     session_ctrl = ctrl if args.expert_runtime == "on" else None
+    mesh = None
+    if args.expert_runtime == "on" and (args.ep or args.tp > 1):
+        from repro.launch.mesh import make_serving_mesh
+        ep = args.ep or None
+        mesh = make_serving_mesh(
+            None if ep is None else ep * args.tp, ep=ep, tp=args.tp)
+        print(f"serving mesh: data=1 ep={mesh.shape['ep']} "
+              f"tp={mesh.shape['tp']} over {len(mesh.devices.flat)} "
+              "devices")
     engine = ServingEngine(cfg, params,
                            max_len=args.prompt_len + args.gen + 1,
                            controller=None if session_ctrl else ctrl,
                            impl=args.impl,
-                           expert_runtime=args.expert_runtime)
+                           expert_runtime=args.expert_runtime,
+                           mesh=mesh)
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
     rng = np.random.default_rng(args.seed)
@@ -106,6 +132,11 @@ def main(argv=None):
               f"{st.transfers} transfers, "
               f"{st.bytes_moved / 1e6:.1f}MB moved, "
               f"{st.instance_seconds_gb:.3g} GB-s resident")
+        print(f"  overlap: {st.overlap_eligible_copies} eligible / "
+              f"{st.exposed_copies} exposed copies, "
+              f"{st.overlap_hidden_s:.3g}s hidden; per-rank MB "
+              + str({r: round(b / 1e6, 2)
+                     for r, b in sorted(st.rank_bytes.items())}))
     print("sample continuations:",
           np.asarray([h.tokens[:8] for h in handles[:2]]))
 

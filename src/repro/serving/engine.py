@@ -32,6 +32,7 @@ clock that TTFT / TPOT / E2E are recorded against.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import time
 from dataclasses import dataclass
@@ -125,19 +126,23 @@ class _Session:
     feed the one jitted ``sample_tokens`` call."""
 
     def __init__(self, cfg, params, num_slots: int, max_len: int,
-                 eos_id, control, time_scale: float, runtime=None):
-        self.kv = SlotKVCache(cfg, params, num_slots, max_len)
+                 eos_id, control, time_scale: float, runtime=None,
+                 batch_mult: int = 1):
+        self.kv = SlotKVCache(cfg, params, num_slots, max_len,
+                              batch_multiple=batch_mult)
+        rows = self.kv.rows   # num_slots padded to the EP shard multiple
+        self.batch_mult = batch_mult
         self.sched = ContinuousBatchingScheduler(self.kv, eos_id=eos_id)
         self.control = control
         self.runtime = runtime
         self.time_scale = time_scale
         self.now = 0.0
-        self.cur = np.zeros(num_slots, np.int32)       # last token per slot
-        self.temp = np.zeros(num_slots, np.float32)
-        self.topk = np.zeros(num_slots, np.int32)
-        self.topp = np.ones(num_slots, np.float32)
-        self.seed = np.zeros(num_slots, np.int32)
-        self.count = np.zeros(num_slots, np.int32)     # tokens sampled
+        self.cur = np.zeros(rows, np.int32)            # last token per slot
+        self.temp = np.zeros(rows, np.float32)
+        self.topk = np.zeros(rows, np.int32)
+        self.topp = np.ones(rows, np.float32)
+        self.seed = np.zeros(rows, np.int32)
+        self.count = np.zeros(rows, np.int32)          # tokens sampled
         self.occupancy: list[int] = []
         self.iters = 0
         self.prefills = 0
@@ -171,7 +176,7 @@ class ServingEngine:
     def __init__(self, cfg, params, *, max_len: int = 512,
                  controller: ControlPlane | None = None,
                  window: int = 0, impl: str | None = None,
-                 expert_runtime: str = "off"):
+                 expert_runtime: str = "off", mesh=None):
         if impl is not None:   # override the config's kernel backend
             from repro.kernels.ops import resolve_impl
             resolve_impl(impl)   # validate eagerly, not at first step
@@ -188,7 +193,17 @@ class ServingEngine:
         self.expert_runtime = expert_runtime
         self._steps: dict[bool, callable] = {}
         self._ep_steps: dict = {}
-        self._ep_mesh = None
+        # `mesh` is the (data, ep, tp) serving mesh the EP slot data
+        # plane runs on (launch.mesh.make_serving_mesh); None keeps the
+        # 1-device mesh. Batches are padded to a multiple of data*ep so
+        # the shard_map'd dispatch always divides evenly.
+        if mesh is not None and tuple(mesh.axis_names) != \
+                ("data", "ep", "tp"):
+            raise ValueError(
+                f"serving mesh must have axes ('data', 'ep', 'tp'), got "
+                f"{tuple(mesh.axis_names)} — use "
+                "launch.mesh.make_serving_mesh")
+        self._ep_mesh = mesh
         self._collect = controller is not None and cfg.is_moe
         self._step = self._get_step(self._collect)
         # right-padded prefill is exact only when no sublayer carries
@@ -283,18 +298,34 @@ class ServingEngine:
             if bucket > plen:
                 toks = np.pad(prompt, (0, bucket - plen))
         mask = (np.arange(toks.shape[0]) < plen)
-        cache = self.new_cache(1)
-        batch = {"tokens": jnp.asarray(toks[None]),
-                 "token_mask": jnp.asarray(mask[None])}
         collect = self._collect if collect is None else collect
         runtime = self._session.runtime if self._session is not None \
             else None
+        # the EP data plane shards the batch over data*ep ranks: pad the
+        # single request to that multiple with all-masked zero rows (the
+        # padded rows carry no active tokens, so metrics, drops, and the
+        # request's own logits are unchanged — only row 0 is spliced
+        # into the pool)
+        bmult = 1
+        if runtime is not None:
+            m = runtime.ctx.mesh
+            bmult = m.shape["data"] * m.shape["ep"]
+        toks_b = np.zeros((bmult, toks.shape[0]), np.int32)
+        toks_b[0] = toks
+        mask_b = np.zeros((bmult, mask.shape[0]), bool)
+        mask_b[0] = mask
+        cache = self.new_cache(bmult)
+        batch = {"tokens": jnp.asarray(toks_b),
+                 "token_mask": jnp.asarray(mask_b)}
         if runtime is not None:
             # EP prefill: same jitted decode_step family as the batched
             # decode, MoE sublayers on the slot data plane (prefill
             # shapes compile their own cache entries; plan changes
-            # re-program the traced tables without recompiling)
-            step = self._get_ep_step(collect, runtime.ctx)
+            # re-program the traced tables without recompiling). The
+            # bmult-1 all-zero pad rows are capacity-neutral
+            # (ctx.pad_rows), so keep/drop matches the 1-row prefill
+            step = self._get_ep_step(collect, dataclasses.replace(
+                runtime.ctx, pad_rows=bmult - 1))
             logits, cache, metrics = step(
                 self.params, batch, cache, jnp.asarray(0, jnp.int32),
                 runtime.ep_state())
@@ -307,13 +338,14 @@ class ServingEngine:
             first_tok = int(jnp.argmax(logits[0, plen - 1]))
         else:
             first_tok = int(T.sample_tokens(
-                logits[:, plen - 1],
+                logits[:1, plen - 1],
                 jnp.full(1, s.temperature, jnp.float32),
                 jnp.full(1, s.top_k, jnp.int32),
                 jnp.full(1, s.top_p, jnp.float32),
                 jnp.full(1, s.effective_seed(rid), jnp.int32),
                 jnp.zeros(1, jnp.int32))[0])
-        return first_tok, cache, plen, metrics, jnp.asarray(mask)
+        return first_tok, cache, plen, metrics, \
+            jnp.asarray(mask_b.reshape(-1))
 
     # ------------------------------------------------- request-level API
 
@@ -335,6 +367,7 @@ class ServingEngine:
                 "positional offsets) — use the fixed-batch prefill/decode "
                 "API for enc-dec models")
         runtime = None
+        batch_mult = 1
         if self.expert_runtime == "on":
             if control is None:
                 raise ValueError(
@@ -347,9 +380,11 @@ class ServingEngine:
             runtime = ExpertRuntime.for_control(
                 self.cfg, self.params, control, mesh=self._ep_mesh)
             runtime.bootstrap(control)
+            batch_mult = (self._ep_mesh.shape["data"]
+                          * self._ep_mesh.shape["ep"])
         self._session = _Session(self.cfg, self.params, num_slots,
                                  self.max_len, eos_id, control, time_scale,
-                                 runtime=runtime)
+                                 runtime=runtime, batch_mult=batch_mult)
 
     def close(self) -> None:
         self._session = None
@@ -415,7 +450,8 @@ class ServingEngine:
                 dt = out.latency_s
                 if sess.runtime is not None:
                     sess.runtime.apply(sess.now, out.events,
-                                       phase="prefill")
+                                       phase="prefill",
+                                       compute_s=out.latency_s)
             self._drive_controller(metrics, token_mask=mask)
             if dt is None:
                 dt = time.perf_counter() - t0
@@ -439,8 +475,12 @@ class ServingEngine:
         if sess.runtime is not None:
             # EP slot data plane: the MoE layers execute the control
             # plane's plans through the runtime's live slot
-            # tables/weights (re-programmed each iteration, no recompile)
-            step_fn = self._get_ep_step(collect, sess.runtime.ctx)
+            # tables/weights (re-programmed each iteration, no
+            # recompile). The KV pool's pad rows (num_slots rounded up
+            # to the shard multiple) are capacity-neutral (ctx.pad_rows)
+            step_fn = self._get_ep_step(collect, dataclasses.replace(
+                sess.runtime.ctx,
+                pad_rows=sess.kv.rows - sess.kv.num_slots))
             logits, kv.cache, metrics = step_fn(
                 self.params, batch, kv.cache, lengths,
                 sess.runtime.ep_state())
@@ -463,7 +503,8 @@ class ServingEngine:
                 dropped=metrics.get("dropped"), phase="decode")
             dt = out.latency_s
             if sess.runtime is not None:
-                sess.runtime.apply(sess.now, out.events, phase="decode")
+                sess.runtime.apply(sess.now, out.events, phase="decode",
+                                   compute_s=out.latency_s)
         self._drive_controller(metrics, token_mask=active)
         if dt is None:
             dt = time.perf_counter() - t0

@@ -36,13 +36,36 @@ cold start moves ~4x fewer bytes and every GB-s of residency bills
 ~4x cheaper — and ``_slot_row_bytes`` stays exactly equal to
 ``costmodel.param_bytes(cfg)``, preserving runtime==analytic parity.
 
-Slot geometry: the plan's `num_devices` logical devices each own
-`slots_per_device` logical slots, flattened to ``total_slots`` physical
-slots spread over the EP mesh ranks (on a 1-device CPU mesh every slot
-lives on rank 0 — the same code places slot s on rank
-``s // (total_slots // ep)`` on a pod). A replica planned onto a full
-device spills to the ring-nearest device with a free slot, mirroring
-``plan_to_tables``.
+Slot geometry and the rank mapping contract: the plan's `num_devices`
+logical devices each own `slots_per_device` logical slots, flattened to
+``total_slots`` physical slots. The physical bank is padded up to the
+next multiple of the mesh's `ep` degree (``phys_slots``) so it splits
+evenly over ranks; pad slots are permanently empty and never referenced
+by routing tables. Physical slot s lives on EP rank
+``s // (phys_slots // ep)``, so logical device g's block of slots maps
+to rank ``(g * slots_per_device) // (phys_slots // ep)`` — contiguous
+logical devices project onto contiguous ranks (the block mapping
+``distributed.ep.device_rank`` when ep divides num_devices). A replica
+planned onto a full device spills to the ring-nearest logical device
+with a free slot, mirroring ``plan_to_tables``; under the block mapping
+the logical ring refines the rank ring, so spills stay rank-local when
+they can. The spill rule is a pure function of the LOGICAL geometry —
+never of `ep` — so the slot layout (and therefore every routed bit) is
+identical on every mesh factorisation of the same logical plan.
+
+Multi-rank execution: the slot weight banks are created under
+``NamedSharding`` (slot axis over 'ep', FFN width over 'tp'), so a slot
+materialisation writes bytes only on the owning rank — metered per rank
+in ``RuntimeStats.rank_bytes``. With ``double_buffer=True`` (default)
+each flush writes the diff into the BACK bank (plus the diff the front
+received last flush — catch-up), then swaps: the donated scatter has no
+data dependency on the bank the in-flight iteration is reading, so
+next-iteration materialisation copies overlap the current iteration's
+EP FFN compute. Copies whose replica is absent from this iteration's
+warm-subset ``served`` plan (i.e. serve only NEXT iteration — the
+ahead-of-time lane, cold or prewarmed) are counted
+``overlap_eligible``; copies the very next dispatch needs (bootstrap,
+where served == plan) are ``exposed``.
 """
 from __future__ import annotations
 
@@ -53,12 +76,13 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import serverless as SL
 from repro.core.control import (MOELESS_EXEC_TIME, PlanEvent,
                                 default_slots_per_device)
 from repro.core.costmodel import V5E, Hardware, derive_coeffs
-from repro.distributed.ep import EPContext
+from repro.distributed.ep import EPContext, _slot_spec
 from repro.kernels import quant as QT
 from repro.models import transformer as T
 
@@ -73,6 +97,16 @@ class RuntimeStats:
     bytes_moved: float = 0.0       # actual bytes written into slot banks
     evictions: int = 0             # keep-alive expiries
     instance_seconds_gb: float = 0.0   # GB-seconds of actual residency
+    # transfer/compute overlap: a copy whose replica serves only from
+    # the NEXT iteration (absent from the warm-subset served plan — the
+    # cold-start lane) has no consumer in the current dispatch, so the
+    # double-buffered scatter overlaps this iteration's FFN compute;
+    # copies the next dispatch needs immediately are exposed
+    overlap_eligible_copies: int = 0
+    exposed_copies: int = 0
+    overlap_hidden_s: float = 0.0  # sum min(cold_start, compute window)
+    # bytes written on each EP mesh rank's slot shard ("rank0", ...)
+    rank_bytes: dict = field(default_factory=dict)
     # per-phase breakdown: prefill iterations apply plans through the
     # SAME diff machinery as decode (and the bootstrap load), so their
     # cold/warm/prewarm and bytes are metered under their own key
@@ -96,7 +130,10 @@ class ApplyReport:
     warm_starts: int = 0
     prewarmed: int = 0
     evictions: int = 0
+    overlap_eligible: int = 0
+    exposed: int = 0
     per_layer_transfers: list = field(default_factory=list)
+    rank_bytes: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -121,7 +158,7 @@ class ExpertRuntime:
     def __init__(self, cfg, params, *, num_devices: int,
                  slots_per_device: int = 0, mesh=None,
                  keep_alive: float = 60.0, hw: Hardware = V5E,
-                 coeffs=None):
+                 coeffs=None, double_buffer: bool = True):
         assert cfg.is_moe, "expert runtime serves MoE models"
         if cfg.act != "swiglu":
             raise NotImplementedError(
@@ -155,12 +192,22 @@ class ExpertRuntime:
             mesh = jax.make_mesh((1, 1, 1), ("data", "ep", "tp"))
         self.mesh = mesh
         self.ep = mesh.shape["ep"]
-        if self.total_slots % self.ep:
-            raise ValueError(
-                f"{self.total_slots} slots do not split over "
-                f"{self.ep} EP ranks")
+        # pad the physical bank to the next multiple of ep so the slot
+        # axis splits evenly over ranks; the old `total // ep` silently
+        # dropped the remainder slots from the data plane. Pad slots are
+        # permanently empty (never allocated, never in tables).
+        self.phys_slots = -(-self.total_slots // self.ep) * self.ep
+        self.pad_slots = self.phys_slots - self.total_slots
+        if self.pad_slots:
+            warnings.warn(
+                f"expert runtime: {self.total_slots} slots "
+                f"({num_devices} devices x {self.slots_per_device}) do "
+                f"not split over {self.ep} EP ranks; padding the bank "
+                f"with {self.pad_slots} masked slot(s)",
+                RuntimeWarning, stacklevel=2)
+        self.slots_per_rank = self.phys_slots // self.ep
         self.ctx = EPContext(mesh=mesh,
-                             slots_per_device=self.total_slots // self.ep,
+                             slots_per_device=self.slots_per_rank,
                              capacity_factor=cfg.moe.capacity_factor)
 
         # padded per-expert weight banks, ONE pad at construction
@@ -175,7 +222,11 @@ class ExpertRuntime:
             raise ValueError(f"unknown slot_dtype {slot_dtype!r}")
         self.padded = {}
         self.banks = {}
+        self._back = {}
+        self._pending = {}
         self._slot_row_bytes = {}
+        self._bank_shardings = {}
+        self.double_buffer = double_buffer
         for j in self.moe_positions:
             bank = params["layers"][j]["moe"]["experts"]
             padded = {
@@ -184,10 +235,30 @@ class ExpertRuntime:
             if slot_dtype == "int8":
                 padded = QT.quantize_expert_bank(padded)
             self.padded[j] = padded
-            self.banks[j] = {
-                k: jnp.zeros((self.periods, self.total_slots) + w.shape[2:],
-                             w.dtype)
-                for k, w in padded.items()}
+            # slot banks live SHARDED: the slot axis over 'ep' (each
+            # rank owns its slots_per_rank block), FFN width over 'tp',
+            # a leading periods axis replicated — so every slot scatter
+            # writes bytes only on the owning rank
+            shardings = {
+                k: NamedSharding(mesh, P(None, *_slot_spec(k)))
+                for k in padded}
+            self._bank_shardings[j] = shardings
+
+            def _zero_bank():
+                return {
+                    k: jax.device_put(
+                        jnp.zeros(
+                            (self.periods, self.phys_slots) + w.shape[2:],
+                            w.dtype),
+                        shardings[k])
+                    for k, w in padded.items()}
+
+            self.banks[j] = _zero_bank()
+            # back buffer of the double-buffered bank: flushes write
+            # here (no data dependency on the bank in-flight compute
+            # reads), then the buffers swap
+            self._back[j] = _zero_bank() if double_buffer else None
+            self._pending[j] = ([], [], [])
             # bytes of ONE slot row as stored — by construction equal to
             # costmodel.param_bytes(cfg) (== coeffs.expert_bytes), the
             # runtime-vs-analytic metering contract
@@ -205,10 +276,16 @@ class ExpertRuntime:
         self.table_nrep = np.ones((lm, e), np.int32)
         self._have_tables = False
         self.stats = RuntimeStats()
+        self.stats.rank_bytes = {f"rank{r}": 0.0 for r in range(self.ep)}
         self.iterations = 0
         # jit caches one program per (position shapes, bucket size); the
-        # power-of-two bucketing in _flush bounds how many that is
-        self._update_fn = jax.jit(_scatter_slots, donate_argnums=(0,))
+        # power-of-two bucketing in _flush bounds how many that is.
+        # Explicit out_shardings keep each rank the owner of its slot
+        # shard across updates (the specs are identical for every MoE
+        # position, so one jit serves them all).
+        self._update_fn = jax.jit(
+            _scatter_slots, donate_argnums=(0,),
+            out_shardings=self._bank_shardings[self.moe_positions[0]])
 
     # ------------------------------------------------------ construction
 
@@ -309,23 +386,37 @@ class ExpertRuntime:
 
     # ------------------------------------------------------------ apply
 
-    def apply(self, t: float, events: list,
-              phase: str = "decode") -> ApplyReport:
+    def rank_of_slot(self, slot: int) -> int:
+        """EP mesh rank owning physical slot `slot` under the sharded
+        bank layout (slot axis split evenly over 'ep')."""
+        return slot // self.slots_per_rank
+
+    def apply(self, t: float, events: list, phase: str = "decode",
+              *, compute_s: float | None = None) -> ApplyReport:
         """Execute one iteration's planning decisions: reap expired
         instances, diff every layer's FULL plan against residency,
         materialise ONLY the changed slots, and rebuild the routing
         tables from the warm-subset ``served`` plans. `phase` tags the
         iteration ('prefill' | 'decode' | 'bootstrap') in the per-phase
-        meters — prefill now executes plans through this same path."""
+        meters — prefill now executes plans through this same path.
+
+        `compute_s` is the modeled iteration latency the copies can hide
+        under: each overlap-eligible copy (replica absent from the
+        served plan — consumed only next iteration) accrues
+        ``min(cold_start_latency, compute_s)`` of hidden transfer time,
+        the analytic bound the measured wall-clock overlap is compared
+        against in serving_bench."""
         if len(events) != self.n_layers:
             raise ValueError(f"{len(events)} plan events for "
                              f"{self.n_layers} MoE layers")
         rep = ApplyReport()
+        rep.rank_bytes = {f"rank{r}": 0.0 for r in range(self.ep)}
         evict0 = self.stats.evictions
         updates = {j: ([], [], []) for j in self.moe_positions}
         for layer, ev in enumerate(events):
             self._reap(layer, t)
             inst = self.instances[layer]
+            served_set = set(ev.served.iter_replicas())
             if not ev.serverless:
                 # serverful semantics: the plan IS the deployment —
                 # replicas absent from it release their slot now
@@ -363,8 +454,26 @@ class ExpertRuntime:
                 ps.append(p)
                 ss.append(slot)
                 es.append(e)
-                self.stats.bytes_moved += self._slot_row_bytes[j]
-                rep.bytes_moved += self._slot_row_bytes[j]
+                row_bytes = self._slot_row_bytes[j]
+                self.stats.bytes_moved += row_bytes
+                rep.bytes_moved += row_bytes
+                rk = f"rank{self.rank_of_slot(slot)}"
+                self.stats.rank_bytes[rk] += row_bytes
+                rep.rank_bytes[rk] += row_bytes
+                # overlap classification: a replica outside the served
+                # plan serves only NEXT iteration, so its copy has no
+                # consumer in the current dispatch — the double-buffered
+                # scatter hides it under this iteration's compute
+                if key not in served_set:
+                    self.stats.overlap_eligible_copies += 1
+                    rep.overlap_eligible += 1
+                    window = compute_s if compute_s is not None \
+                        else ev.exec_time
+                    self.stats.overlap_hidden_s += \
+                        min(self._cold_start_s, window)
+                else:
+                    self.stats.exposed_copies += 1
+                    rep.exposed += 1
             self.stats.transfers += n_transfer
             rep.transfers += n_transfer
             rep.per_layer_transfers.append(n_transfer)
@@ -393,24 +502,46 @@ class ExpertRuntime:
             for r, g in enumerate(placement):
                 slots[e, r] = inst[(e, int(g))].slot
 
+    def _scatter(self, bank, j, ps, ss, es):
+        """One donated jitted scatter, sized to a power-of-two bucket so
+        a steady stream of small diffs reuses a handful of compiled
+        update programs."""
+        k = len(ps)
+        bucket = 1 << (k - 1).bit_length()
+        ps = ps + [ps[-1]] * (bucket - k)
+        ss = ss + [ss[-1]] * (bucket - k)
+        es = es + [es[-1]] * (bucket - k)
+        return self._update_fn(
+            bank, self.padded[j],
+            jnp.asarray(ps, jnp.int32),
+            jnp.asarray(ss, jnp.int32),
+            jnp.asarray(es, jnp.int32))
+
     def _flush(self, updates: dict) -> None:
-        """Write the changed slots' weights into the device banks — one
-        donated jitted scatter per pattern position, sized to a
-        power-of-two bucket so a steady stream of small diffs reuses a
-        handful of compiled update programs."""
+        """Write the changed slots' weights into the device banks.
+
+        Double-buffered (default): the new diff PLUS the diff the front
+        bank received last flush (catch-up, kept in ``_pending``) is
+        scattered into the BACK bank, then the buffers swap — the
+        donated scatter never touches the bank an in-flight iteration
+        is reading, so the copies overlap compute instead of serialising
+        behind it. ``bytes_moved`` / ``rank_bytes`` meter each replica
+        copy once (the logical cold-start traffic); the catch-up write
+        is pipeline bookkeeping, not a second cold start."""
         for j, (ps, ss, es) in updates.items():
-            k = len(ps)
-            if k == 0:
+            if not self.double_buffer:
+                if len(ps):
+                    self.banks[j] = self._scatter(
+                        self.banks[j], j, ps, ss, es)
                 continue
-            bucket = 1 << (k - 1).bit_length()
-            ps = ps + [ps[-1]] * (bucket - k)
-            ss = ss + [ss[-1]] * (bucket - k)
-            es = es + [es[-1]] * (bucket - k)
-            self.banks[j] = self._update_fn(
-                self.banks[j], self.padded[j],
-                jnp.asarray(ps, jnp.int32),
-                jnp.asarray(ss, jnp.int32),
-                jnp.asarray(es, jnp.int32))
+            pp, sp, ep_ = self._pending[j]
+            cps, css, ces = pp + list(ps), sp + list(ss), ep_ + list(es)
+            if not cps:
+                continue
+            back = self._scatter(self._back[j], j, cps, css, ces)
+            self._back[j] = self.banks[j]
+            self.banks[j] = back
+            self._pending[j] = (list(ps), list(ss), list(es))
 
     # ------------------------------------------------------------ export
 

@@ -45,14 +45,21 @@ class SlotKVCache:
                  slot back to its request without scanning the scheduler.
     """
 
-    def __init__(self, cfg, params, num_slots: int, max_len: int):
+    def __init__(self, cfg, params, num_slots: int, max_len: int,
+                 batch_multiple: int = 1):
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
-        self.cache = T.init_cache(cfg, params, num_slots, max_len)
-        self.lengths = np.zeros(num_slots, np.int32)
-        self.active = np.zeros(num_slots, bool)
-        self.owners = np.full(num_slots, -1, np.int64)
+        # the EP slot data plane shards the batch axis over data*ep mesh
+        # ranks, so the pool's row count is padded up to that multiple;
+        # pad rows are never allocated (the free list covers only the
+        # real slots), stay inactive forever, and flow through the
+        # batched step as masked no-ops
+        self.rows = -(-num_slots // batch_multiple) * batch_multiple
+        self.cache = T.init_cache(cfg, params, self.rows, max_len)
+        self.lengths = np.zeros(self.rows, np.int32)
+        self.active = np.zeros(self.rows, bool)
+        self.owners = np.full(self.rows, -1, np.int64)
         self._free = list(range(num_slots - 1, -1, -1))
 
     # ------------------------------------------------------------ slots
