@@ -144,6 +144,39 @@ def main(slots: int = 8, gen: int = 32, prompt_len: int = 16,
     hidden_s = max(tot_s - disp_s, 0.0)
     n_el = max(rep_o.overlap_eligible, 1)
 
+    # gateway lane: the same burst routed through the multi-replica
+    # router (2 threaded replicas, least-outstanding-tokens balancing)
+    # — measures the whole submit -> step-thread -> event-fanout path
+    from repro.serving.gateway import AutoscalerConfig, EngineDriver, Router
+
+    def _replica(i: int) -> EngineDriver:
+        eng = ServingEngine(cfg, params, max_len=max_len)
+        return EngineDriver(eng, replica_id=i, num_slots=slots,
+                            max_pending=2 * slots)
+
+    router = Router(_replica, threaded=True,
+                    scaler=AutoscalerConfig(min_replicas=2,
+                                            max_replicas=2))
+
+    def _routed_burst(n: int) -> float:
+        t0 = time.perf_counter()
+        for _ in range(n):
+            router.submit(GenRequest(
+                rid=router.next_rid(), arrival=float("nan"),
+                prompt=rng.integers(0, cfg.vocab_size, size=prompt_len,
+                                    dtype=np.int32),
+                max_new_tokens=gen))
+        want = router.metrics()["router"]["admitted"]
+        while router.metrics()["router"]["completed"] < want:
+            time.sleep(0.002)
+        return time.perf_counter() - t0
+
+    _routed_burst(2)                   # warm up both replicas' compiles
+    gw_n = 2 * slots
+    gw_s = _routed_burst(gw_n)
+    gw_m = router.metrics()["router"]
+    router.stop()
+
     # rows in the harness format: (name, us_per_token, derived)
     tokens = slots * gen
     syncs = ctrl.host_transfers - n0
@@ -176,6 +209,10 @@ def main(slots: int = 8, gen: int = 32, prompt_len: int = 16,
          f"in {disp_s * 1e3:.2f}ms, completed in {tot_s * 1e3:.2f}ms "
          f"({hidden_s * 1e3:.2f}ms hidden behind compute; analytic "
          f"cold-start bound {rt2.cold_start_latency() * 1e3:.2f}ms/copy)"),
+        ("serve_gateway_2rep", gw_s / (gw_n * gen) * 1e6,
+         f"{gw_n * gen / gw_s:.1f} tok/s across 2 threaded replicas "
+         f"(admitted {gw_m['admitted']}, completed {gw_m['completed']}, "
+         f"rejected {gw_m['rejected']})"),
     ]
 
 
@@ -283,7 +320,101 @@ def deterministic_counters(slots: int = 6, gen: int = 8,
         "dropped_minus_fp32": (float(res.dropped_tokens)
                                - f32["dropped_tokens"]),
     }
+
+    out["gateway"] = _gateway_counters(arch=arch, impl=impl)
     return out
+
+
+def _gateway_counters(*, arch: str = "mixtral-8x7b", impl: str = "auto",
+                      slots: int = 2, gen: int = 8, prompt_len: int = 8,
+                      n_requests: int = 10):
+    """Deterministic gateway/router/autoscaler scenario — NO wall clock.
+
+    An unthreaded router (the caller drives ``step_all``) over replicas
+    whose sessions run on the MODELED serving clock (the MoEless control
+    plane is attached as session control), so admissions, rejections,
+    queue delays and every autoscale decision are pure functions of
+    (seed, config): a tiny replica (2 KV slots, 2-deep admission queue)
+    takes a 10-request burst, backpressure rejects the overflow,
+    sustained queue delay scales the fleet up toward ``max_replicas``,
+    one request is cancelled mid-flight, and post-drain idle ticks burn
+    enough resident GB-s to retire the extra replicas back to
+    ``min_replicas``."""
+    from repro.configs import get_config
+    from repro.core import predictor as P
+    from repro.models import model as M
+    from repro.serving.engine import MoElessController, ServingEngine
+    from repro.serving.gateway import (AutoscalerConfig, Backpressure,
+                                       EngineDriver, Router)
+    from repro.serving.scheduler import GenRequest
+
+    cfg = get_config(arch, smoke=True).with_(dtype="float32", impl=impl)
+    cfg = _with_slot_dtype(cfg, "fp32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    pred = P.from_gates(cfg, params, distance=1)
+
+    def factory(i: int) -> EngineDriver:
+        ctrl = MoElessController(cfg, num_devices=8, predictor=pred)
+        eng = ServingEngine(cfg, params, max_len=prompt_len + gen + 1)
+        return EngineDriver(eng, replica_id=i, num_slots=slots,
+                            max_pending=2, control=ctrl)
+
+    router = Router(factory, threaded=False, scaler=AutoscalerConfig(
+        min_replicas=1, max_replicas=3, queue_delay_up_s=1e-9, sustain=2,
+        idle_gb_s_down=1e-6, cooldown_s=0.0))
+    rng = np.random.default_rng(0)
+    token_events = 0
+    handles = []
+    for k in range(n_requests):
+        req = GenRequest(
+            rid=router.next_rid(), arrival=float("nan"),
+            prompt=rng.integers(0, cfg.vocab_size, size=prompt_len,
+                                dtype=np.int32),
+            max_new_tokens=gen)
+        try:
+            d, h = router.submit(req)
+            if h.status != "rejected":
+                handles.append((d, h))
+        except Backpressure:
+            pass
+        # the first 4 submits land as one cold burst before any step:
+        # the lone replica's 2-deep admission queue overflows and the
+        # tail of the burst bounces with 429-style backpressure
+        if k >= 3:
+            token_events += router.step_all()
+            router.autoscale(router.clock())
+    # cancel the youngest request still in flight (frees its KV slot)
+    for d, h in reversed(handles):
+        if h.status in ("pending", "running"):
+            router.cancel(d, h)
+            break
+    for _ in range(10_000):
+        if not any(d.engine.has_work for d in router.replicas.values()
+                   if d.healthy):
+            break
+        token_events += router.step_all()
+        router.autoscale(router.clock())
+    else:
+        raise RuntimeError("gateway counter scenario did not drain")
+    # idle ticks on a synthetic clock: each tick bills dt x resident_gb
+    # of idle burn per replica until the fleet is back at min_replicas
+    t_end = router.clock()
+    for i in range(1, 7):
+        router.autoscale(t_end + 0.05 * i)
+    m = router.metrics()["router"]
+    router.stop()
+    return {
+        "requests": n_requests,
+        "admitted": int(m["admitted"]),
+        "rejected": int(m["rejected"]),
+        "cancelled": int(m["cancelled"]),
+        "completed": int(m["completed"]),
+        "token_events": int(token_events),
+        "scale_up_events": int(m["scale_ups"]),
+        "scale_down_events": int(m["scale_downs"]),
+        "max_replicas_seen": int(m["max_replicas_seen"]),
+        "final_replicas": int(m["num_replicas"]),
+    }
 
 
 if __name__ == "__main__":

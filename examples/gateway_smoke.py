@@ -1,0 +1,156 @@
+"""End-to-end gateway smoke: boot ``launch/serve.py --gateway`` as a
+subprocess, hit it over real HTTP, and assert the tokens are
+bit-identical to an offline ``engine.serve()`` run with the same
+config/seed/prompt — the gateway's core acceptance criterion.
+
+Run from the repo root (CI does):
+
+    python examples/gateway_smoke.py
+
+Exits non-zero on any mismatch.
+"""
+from __future__ import annotations
+
+import http.client
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+ARCH = "mixtral-8x7b"
+PROMPT = list(range(1, 9))          # token ids; len 8
+GEN = 6
+SLOTS = 2
+MAX_LEN = len(PROMPT) + GEN + 1
+BOOT_TIMEOUT_S = 300
+
+
+def offline_tokens() -> list[int]:
+    """Greedy continuation from a plain in-process engine — the ground
+    truth the gateway must reproduce bit-for-bit."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.serving.engine import ServingEngine
+    from repro.serving.scheduler import GenRequest, SamplingParams
+
+    cfg = get_config(ARCH, smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, max_len=MAX_LEN)
+    req = GenRequest(rid=0, arrival=0.0,
+                     prompt=np.asarray(PROMPT, np.int32),
+                     max_new_tokens=GEN,
+                     sampling=SamplingParams(temperature=0.0))
+    eng.start(num_slots=SLOTS)
+    handle = eng.submit(req)
+    eng.run()
+    tokens = [int(t) for t in handle.tokens]
+    eng.close()
+    return tokens
+
+
+def boot_gateway() -> tuple[subprocess.Popen, int]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "--gateway",
+         "--port", "0", "--replicas", "1", "--slots", str(SLOTS),
+         "--prompt-len", str(len(PROMPT)), "--gen", str(GEN),
+         "--arch", ARCH, "--seed", "0"],
+        env=env, cwd=ROOT, stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT, text=True)
+    deadline = time.monotonic() + BOOT_TIMEOUT_S
+    lines = []
+    while True:
+        if time.monotonic() > deadline:
+            proc.kill()
+            sys.exit("gateway did not become ready:\n" + "".join(lines))
+        line = proc.stdout.readline()
+        if not line and proc.poll() is not None:
+            sys.exit("gateway exited early:\n" + "".join(lines))
+        lines.append(line)
+        if line.startswith("GATEWAY READY"):
+            port = int(line.split()[2].rsplit(":", 1)[1])
+            return proc, port
+
+
+def request(port: int, method: str, path: str, body: dict | None = None):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=120)
+    payload = None if body is None else json.dumps(body)
+    conn.request(method, path, body=payload,
+                 headers={"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    data = resp.read()
+    conn.close()
+    return resp.status, data
+
+
+def sse_tokens(raw: bytes) -> tuple[list[int], str | None]:
+    tokens, reason, done = [], None, False
+    for frame in raw.split(b"\n\n"):
+        if not frame.startswith(b"data: "):
+            continue
+        if frame == b"data: [DONE]":
+            done = True
+            continue
+        choice = json.loads(frame[6:])["choices"][0]
+        tokens += choice.get("tokens", [])
+        reason = choice.get("finish_reason") or reason
+    assert done, "SSE stream did not finish with data: [DONE]"
+    return tokens, reason
+
+
+def main() -> None:
+    expected = offline_tokens()
+    print(f"offline greedy tokens: {expected}")
+    assert len(expected) == GEN
+
+    proc, port = boot_gateway()
+    try:
+        st, raw = request(port, "GET", "/healthz")
+        health = json.loads(raw)
+        assert st == 200 and health["status"] == "ok", (st, health)
+
+        st, raw = request(port, "POST", "/v1/completions",
+                          {"prompt": PROMPT, "max_tokens": GEN})
+        body = json.loads(raw)
+        assert st == 200, (st, body)
+        got = body["choices"][0]["tokens"]
+        assert got == expected, f"unary mismatch: {got} != {expected}"
+        assert body["choices"][0]["finish_reason"] == "length", body
+        assert body["usage"]["completion_tokens"] == GEN, body
+        print(f"unary completion OK: {got}")
+
+        st, raw = request(port, "POST", "/v1/completions",
+                          {"prompt": PROMPT, "max_tokens": GEN,
+                           "stream": True})
+        assert st == 200, (st, raw[:200])
+        got, reason = sse_tokens(raw)
+        assert got == expected, f"SSE mismatch: {got} != {expected}"
+        assert reason == "length", reason
+        print(f"SSE stream OK: {got}")
+
+        st, raw = request(port, "GET", "/metrics")
+        m = json.loads(raw)["router"]
+        assert st == 200 and m["admitted"] >= 2 \
+            and m["completed"] >= 2 and m["rejected"] == 0, m
+        print(f"metrics OK: {m}")
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+    print("gateway smoke PASS: HTTP tokens == offline engine.serve()")
+
+
+if __name__ == "__main__":
+    main()

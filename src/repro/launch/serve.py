@@ -4,6 +4,14 @@ API (submit / run / stream) with the MoEless control plane attached
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
       --requests 8 --prompt-len 32 --gen 16 --temperature 0.8
+
+``--gateway`` boots the OpenAI-compatible HTTP front door instead:
+an asyncio server exposing /v1/completions + /v1/chat/completions
+(token-id prompts, SSE streaming) over a router of N engine replicas
+with meter-driven autoscaling between ``--replicas min:max``:
+
+  PYTHONPATH=src python -m repro.launch.serve --gateway --port 8000 \
+      --replicas 1:2 --slots 4 --max-pending 64
 """
 from __future__ import annotations
 
@@ -13,6 +21,66 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+
+
+def _parse_replicas(spec: str) -> tuple[int, int]:
+    """'N' or 'MIN:MAX' -> (min, max)."""
+    lo, _, hi = spec.partition(":")
+    try:
+        lo_i = int(lo)
+        hi_i = int(hi) if hi else lo_i
+    except ValueError:
+        raise SystemExit(f"--replicas {spec!r}: expected N or MIN:MAX")
+    if not 1 <= lo_i <= hi_i:
+        raise SystemExit(f"--replicas {spec!r}: need 1 <= min <= max")
+    return lo_i, hi_i
+
+
+def _run_gateway(args, cfg, params, max_len: int) -> None:
+    import asyncio
+
+    from repro.serving.engine import MoElessController, ServingEngine
+    from repro.serving.gateway import (AutoscalerConfig, EngineDriver,
+                                       GatewayServer, Router)
+
+    lo, hi = _parse_replicas(args.replicas)
+    use_ctrl = cfg.is_moe and not args.no_moeless \
+        and args.expert_runtime == "on"
+
+    def factory(i: int) -> EngineDriver:
+        # each replica owns its engine, session, and (when the expert
+        # runtime executes plans) its own control plane — controllers
+        # hold per-balancer mutable state and must never be shared
+        ctrl = MoElessController(cfg, num_devices=args.devices) \
+            if use_ctrl else None
+        eng = ServingEngine(cfg, params, max_len=max_len, impl=args.impl,
+                            expert_runtime=args.expert_runtime)
+        return EngineDriver(eng, replica_id=i, num_slots=args.slots,
+                            max_pending=args.max_pending, control=ctrl)
+
+    router = Router(factory, scaler=AutoscalerConfig(
+        min_replicas=lo, max_replicas=hi,
+        queue_delay_up_s=args.scale_up_delay,
+        idle_gb_s_down=args.scale_down_idle_gb_s))
+
+    async def _main():
+        srv = GatewayServer(router, host=args.host, port=args.port)
+        host, port = await srv.start()
+        print(f"GATEWAY READY http://{host}:{port} "
+              f"arch={cfg.name} replicas={lo}:{hi} slots={args.slots} "
+              f"max_len={max_len} max_pending={args.max_pending}",
+              flush=True)
+        try:
+            await srv.serve_forever()
+        finally:
+            await srv.close()
+
+    try:
+        asyncio.run(_main())
+    except KeyboardInterrupt:
+        pass
+    finally:
+        router.stop()
 
 
 def main(argv=None):
@@ -49,6 +117,25 @@ def main(argv=None):
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N XLA host-platform devices (CPU multi-"
                          "rank serving without real accelerators)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve the OpenAI-compatible HTTP gateway "
+                         "instead of running a one-shot batch")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="gateway port (0 = pick a free one)")
+    ap.add_argument("--replicas", default="1",
+                    help="engine replica count: N or MIN:MAX "
+                         "(MAX > MIN enables autoscaling)")
+    ap.add_argument("--max-pending", type=int, default=64,
+                    help="per-replica admission queue bound; beyond it "
+                         "the gateway answers HTTP 429")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="gateway KV slot capacity in tokens "
+                         "(0 = prompt-len + gen + 1)")
+    ap.add_argument("--scale-up-delay", type=float, default=0.5,
+                    help="sustained queue delay (s) that adds a replica")
+    ap.add_argument("--scale-down-idle-gb-s", type=float, default=1.0,
+                    help="idle GB-s burn that retires a replica")
     args = ap.parse_args(argv)
 
     if args.host_devices:
@@ -74,6 +161,10 @@ def main(argv=None):
             cfg.moe, slot_dtype=args.slot_dtype), impl=args.impl)
     key = jax.random.PRNGKey(args.seed)
     params = M.init_params(cfg, key)
+    if args.gateway:
+        max_len = args.max_len or args.prompt_len + args.gen + 1
+        _run_gateway(args, cfg, params, max_len)
+        return
     ctrl = None
     if cfg.is_moe and not args.no_moeless:
         ctrl = MoElessController(cfg, num_devices=args.devices)

@@ -34,10 +34,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
 from dataclasses import dataclass
 from functools import partial
-from typing import Iterator, NamedTuple
+from typing import Callable, Iterator, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -212,6 +213,12 @@ class ServingEngine:
             sub.mixer == "attn" for sub in T.layer_pattern(cfg)))
         self.iteration = 0
         self._session: _Session | None = None
+        # the gateway's async driver submits/cancels from the event-loop
+        # thread while a background thread drives the step loop; the
+        # RLock makes the session-mutating surface (submit / cancel /
+        # step / start / close) safe to share across threads
+        self._lock = threading.RLock()
+        self._step_hooks: list[Callable] = []
 
     def _get_step(self, collect: bool):
         if collect not in self._steps:
@@ -382,12 +389,15 @@ class ServingEngine:
             runtime.bootstrap(control)
             batch_mult = (self._ep_mesh.shape["data"]
                           * self._ep_mesh.shape["ep"])
-        self._session = _Session(self.cfg, self.params, num_slots,
-                                 self.max_len, eos_id, control, time_scale,
-                                 runtime=runtime, batch_mult=batch_mult)
+        with self._lock:
+            self._session = _Session(self.cfg, self.params, num_slots,
+                                     self.max_len, eos_id, control,
+                                     time_scale, runtime=runtime,
+                                     batch_mult=batch_mult)
 
     def close(self) -> None:
-        self._session = None
+        with self._lock:
+            self._session = None
 
     @property
     def _sess(self) -> _Session:
@@ -395,34 +405,62 @@ class ServingEngine:
             self.start()
         return self._session
 
+    @property
+    def has_work(self) -> bool:
+        """True while the open session has pending or running requests —
+        what a background step-loop thread polls between wakeups."""
+        sess = self._session
+        return sess is not None and not sess.sched.done
+
+    # ------------------------------------------------- step-loop hooks
+
+    def add_step_hook(self, fn: Callable) -> None:
+        """Register ``fn(events: list[TokenEvent])`` to run after every
+        ``step`` (still under the engine lock) — the gateway driver fans
+        these out to per-request asyncio queues."""
+        self._step_hooks.append(fn)
+
+    def remove_step_hook(self, fn: Callable) -> None:
+        self._step_hooks.remove(fn)
+
     def submit(self, req: GenRequest) -> RequestHandle:
         """Enqueue one request into the running session (opened with
         defaults if needed). A NaN arrival means "now" (live submission);
         trace replays carry their own arrival times. Returns a handle
         whose status is `rejected` if the request cannot ever fit a KV
-        slot (admission control)."""
-        sess = self._sess
-        if math.isnan(req.arrival):
-            req.arrival = sess.now
-        ok = sess.sched.submit(req)
-        return RequestHandle(req, self, _rejected=not ok)
+        slot (admission control). Thread-safe."""
+        with self._lock:
+            sess = self._sess
+            if math.isnan(req.arrival):
+                req.arrival = sess.now
+            ok = sess.sched.submit(req)
+            return RequestHandle(req, self, _rejected=not ok)
 
     def cancel(self, handle: RequestHandle) -> bool:
         """Cancel a queued or mid-decode request. A running request's KV
         slot is recycled immediately — the next pending arrival can be
         admitted on the very next ``step``. Returns False if the request
-        had already finished (or the session is gone)."""
-        sess = self._session
-        if sess is None:
-            return False
-        return sess.sched.cancel(handle.req, sess.now)
+        had already finished (or the session is gone). Thread-safe."""
+        with self._lock:
+            sess = self._session
+            if sess is None:
+                return False
+            return sess.sched.cancel(handle.req, sess.now)
 
     def step(self) -> list[TokenEvent]:
         """ONE serving iteration: admit every arrived request that fits a
         free slot (each prefilled alone, spliced into the pool), then run
         one batched decode step over the whole pool and sample all slots
         in one jitted call. Returns the tokens generated this iteration.
-        Each admission and the decode step drive the control plane."""
+        Each admission and the decode step drive the control plane.
+        Thread-safe; registered step hooks fire before the lock drops."""
+        with self._lock:
+            events = self._step_impl()
+            for fn in list(self._step_hooks):
+                fn(events)
+            return events
+
+    def _step_impl(self) -> list[TokenEvent]:
         sess = self._sess
         sched, kv = sess.sched, sess.kv
         events: list[TokenEvent] = []

@@ -1,0 +1,22 @@
+"""OpenAI-compatible async serving gateway.
+
+Layers (each importable alone):
+
+  * ``protocol`` — OpenAI-style JSON <-> engine types (token-id
+    prompts, SSE framing, structured 400 errors);
+  * ``driver``   — one replica: a ``ServingEngine`` session behind a
+    background step-loop thread with event fan-out, backpressure, and
+    cancel-on-disconnect;
+  * ``router``   — least-outstanding-tokens load balancing over N
+    replicas + the meter-driven autoscaler (queue-delay scale-up,
+    idle-GB-s scale-down);
+  * ``server``   — the stdlib asyncio HTTP/SSE front door.
+"""
+from repro.serving.gateway.driver import (Backpressure,  # noqa: F401
+                                          EngineDriver, ReplicaMeters)
+from repro.serving.gateway.protocol import (CompletionRequest,  # noqa: F401
+                                            RequestError, parse_completion)
+from repro.serving.gateway.router import (Autoscaler,  # noqa: F401
+                                          AutoscalerConfig, Router,
+                                          ScaleEvent)
+from repro.serving.gateway.server import GatewayServer  # noqa: F401

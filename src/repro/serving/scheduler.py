@@ -18,12 +18,26 @@ The scheduler is pure bookkeeping — model execution lives in
 """
 from __future__ import annotations
 
-import bisect
+import heapq
 import math
 from dataclasses import dataclass, field
 from typing import Optional
 
 import numpy as np
+
+
+class SamplingValidationError(ValueError):
+    """An invalid ``SamplingParams`` field, carrying the field name and
+    offending value so API layers (the serving gateway) can map the
+    rejection to a structured HTTP 400 body
+    (``{"error": {"param": ..., "message": ...}}``) instead of parsing
+    free-form text."""
+
+    def __init__(self, param: str, value, message: str):
+        self.param = param
+        self.value = value
+        self.message = message
+        super().__init__(f"{param}={value!r}: {message}")
 
 
 @dataclass(frozen=True)
@@ -45,14 +59,25 @@ class SamplingParams:
     priority: int = 0
 
     def __post_init__(self):
-        if self.top_p <= 0:
-            raise ValueError(
-                f"top_p={self.top_p} masks every token (the nucleus is "
-                "empty); use top_p=1.0 to disable the filter")
+        if not math.isfinite(self.temperature):
+            raise SamplingValidationError(
+                "temperature", self.temperature,
+                "temperature must be finite (<= 0 selects greedy argmax)")
+        if not math.isfinite(self.top_p) or self.top_p <= 0:
+            raise SamplingValidationError(
+                "top_p", self.top_p,
+                "top_p masks every token (the nucleus is empty); use "
+                "top_p=1.0 to disable the filter")
         # normalise stop sequences to hashable int tuples; reject empties
-        stop = tuple(tuple(int(t) for t in s) for s in self.stop)
+        try:
+            stop = tuple(tuple(int(t) for t in s) for s in self.stop)
+        except (TypeError, ValueError):
+            raise SamplingValidationError(
+                "stop", self.stop,
+                "stop must be a sequence of token-id sequences") from None
         if any(len(s) == 0 for s in stop):
-            raise ValueError("empty stop sequence")
+            raise SamplingValidationError(
+                "stop", self.stop, "empty stop sequence")
         object.__setattr__(self, "stop", stop)
 
     def effective_seed(self, rid: int) -> int:
@@ -126,18 +151,44 @@ def percentile_summary(records: list[RequestMetrics]) -> dict:
 
 
 class ContinuousBatchingScheduler:
-    """Arrival queue + admission control over a ``SlotKVCache``."""
+    """Arrival queue + admission control over a ``SlotKVCache``.
+
+    Admission is heap-based: a deep gateway backlog admits in
+    O(log n) per pop instead of the old O(n) scan per free slot per
+    step (O(n²) under backlog). Pending requests live in two
+    lazily-cleaned heaps — ``_waiting`` ordered by (arrival, seq) for
+    requests that have not arrived yet, and ``_ready`` ordered by
+    (-priority, arrival, seq) for arrived requests — so the admission
+    order is EXACTLY the old semantics: highest priority first, FCFS
+    (arrival, then submission order) within a priority level.
+    Cancellation just drops the request from the live set; stale heap
+    entries are skipped on the next peek."""
 
     def __init__(self, kv, *, eos_id: int | None = None):
         self.kv = kv
         self.eos_id = eos_id
-        self.pending: list[GenRequest] = []          # (arrival, seq)-sorted
         self._seq = 0                                # submission tiebreak
         self._keys: dict[int, tuple] = {}            # id(req) -> sort key
+        self._live: dict[int, GenRequest] = {}       # id(req) -> pending
+        self._waiting: list[tuple] = []              # (arrival, seq, req)
+        self._ready: list[tuple] = []                # (-prio, arr, seq, req)
+        self._ready_arrivals: list[tuple] = []       # (arrival, seq, req)
         self.running: dict[int, GenRequest] = {}     # slot -> request
         self.finished: list[GenRequest] = []
         self.cancelled: list[GenRequest] = []
         self.rejected: list[GenRequest] = []
+
+    @property
+    def pending(self) -> list[GenRequest]:
+        """Pending requests in (arrival, submission) order — a sorted
+        VIEW for introspection and tests; admission pops the heaps."""
+        return sorted(self._live.values(),
+                      key=lambda r: self._keys[id(r)])
+
+    @property
+    def num_pending(self) -> int:
+        """O(1) pending depth — the gateway's backpressure signal."""
+        return len(self._live)
 
     # --------------------------------------------------------- admission
 
@@ -152,31 +203,58 @@ class ContinuousBatchingScheduler:
         key = (req.arrival, self._seq)
         self._seq += 1
         self._keys[id(req)] = key
-        bisect.insort(self.pending, req, key=lambda r: self._keys[id(r)])
+        self._live[id(req)] = req
+        heapq.heappush(self._waiting, (req.arrival, self._seq - 1, req))
         return True
 
+    def _peek(self, heap: list) -> tuple | None:
+        """Head of `heap`, lazily discarding entries whose request has
+        left the pending set (popped for admission, or cancelled)."""
+        while heap and self._live.get(id(heap[0][-1])) is not heap[0][-1]:
+            heapq.heappop(heap)
+        return heap[0] if heap else None
+
     def next_arrival(self) -> float | None:
-        return self.pending[0].arrival if self.pending else None
+        """Earliest arrival among pending requests (None if empty)."""
+        heads = (self._peek(self._waiting),
+                 self._peek(self._ready_arrivals))
+        arrivals = [e[0] for e in heads if e is not None]
+        return min(arrivals) if arrivals else None
 
     def pop_admissible(self, now: float) -> GenRequest | None:
         """Highest-priority request that has arrived by `now`, if a slot
-        is free; FCFS within a priority level (the queue is kept
-        arrival-sorted, so a not-yet-arrived head means nothing has
-        arrived)."""
-        if not self.pending or self.kv.num_free == 0:
+        is free; FCFS within a priority level. O(log n) amortised."""
+        if not self._live or self.kv.num_free == 0:
             return None
-        best = None
-        for i, r in enumerate(self.pending):
-            if r.arrival > now:
-                break                      # pending is arrival-sorted
-            if best is None or r.sampling.priority \
-                    > self.pending[best].sampling.priority:
-                best = i
-        if best is None:
+        # release everything that has arrived into the priority heap
+        while (head := self._peek(self._waiting)) is not None \
+                and head[0] <= now:
+            arrival, seq, req = heapq.heappop(self._waiting)
+            heapq.heappush(self._ready,
+                           (-req.sampling.priority, arrival, seq, req))
+            heapq.heappush(self._ready_arrivals, (arrival, seq, req))
+        head = self._peek(self._ready)
+        if head is None:
             return None
-        req = self.pending.pop(best)
+        heapq.heappop(self._ready)
+        req = head[-1]
         del self._keys[id(req)]
+        del self._live[id(req)]
         return req
+
+    def queue_delay(self, now: float) -> float:
+        """Age of the oldest pending request at `now` (0.0 when nothing
+        is waiting) — the gateway autoscaler's scale-up signal."""
+        nxt = self.next_arrival()
+        return max(0.0, now - nxt) if nxt is not None else 0.0
+
+    def outstanding_tokens(self) -> int:
+        """Token budget still owed to pending + running requests — the
+        router's least-outstanding-tokens load signal."""
+        owed = sum(r.max_new_tokens for r in self._live.values())
+        owed += sum(max(r.max_new_tokens - len(r.tokens), 0)
+                    for r in self.running.values())
+        return owed
 
     def start(self, req: GenRequest, slot: int, now: float) -> None:
         """Bind a freshly-prefilled request to its slot: it joins the
@@ -220,12 +298,11 @@ class ContinuousBatchingScheduler:
         a running request releases its KV slot immediately (mid-decode —
         the freed slot admits the next pending arrival on the very next
         iteration). Returns False if the request already left."""
-        if id(req) in self._keys:
-            # remove by IDENTITY: list.remove would use dataclass __eq__,
-            # which compares numpy prompt arrays (ambiguous-truth crash)
-            # and could drop a different but equal-looking request
-            idx = next(i for i, r in enumerate(self.pending) if r is req)
-            del self.pending[idx]
+        if self._live.get(id(req)) is req:
+            # remove by IDENTITY (dataclass __eq__ compares numpy prompt
+            # arrays — ambiguous-truth crash); the heaps drop their now-
+            # stale entries lazily on the next peek
+            del self._live[id(req)]
             del self._keys[id(req)]
         elif req.slot in self.running \
                 and self.running[req.slot] is req:
@@ -240,7 +317,7 @@ class ContinuousBatchingScheduler:
 
     @property
     def done(self) -> bool:
-        return not self.pending and not self.running
+        return not self._live and not self.running
 
     def metrics(self) -> list[RequestMetrics]:
         return [RequestMetrics.of(r) for r in self.finished]

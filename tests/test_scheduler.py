@@ -258,3 +258,55 @@ def test_requests_from_trace_clipping():
     _, clean = requests_from_trace([Request(0.0, 4, 4)], vocab_size=64,
                                    max_len=32)
     assert not clean.any
+
+
+# ------------------------------------- heap admission == old O(n) scan
+
+
+class _FakeKV:
+    """Just enough KV surface for admission-order tests."""
+    max_len = 10_000
+    num_free = 1
+
+
+def _reference_pop(pending, seq_of, now):
+    """The pre-heap admission rule, as a literal O(n) scan: among
+    arrived requests, strictly-highest priority wins; FCFS by
+    (arrival, submission order) within a priority level."""
+    arrived = [r for r in pending if r.arrival <= now]
+    best = None
+    for r in sorted(arrived, key=lambda r: (r.arrival, seq_of[id(r)])):
+        if best is None or r.sampling.priority > best.sampling.priority:
+            best = r
+    return best
+
+
+def test_heap_admission_matches_scan_reference():
+    from repro.serving.scheduler import SamplingParams
+    rng = np.random.default_rng(42)
+    sched = ContinuousBatchingScheduler(_FakeKV())
+    pending, seq_of = [], {}
+    for i in range(200):
+        r = GenRequest(
+            rid=i, arrival=float(rng.integers(0, 20)),
+            prompt=np.ones(4, np.int32), max_new_tokens=2,
+            sampling=SamplingParams(priority=int(rng.integers(-2, 3))))
+        assert sched.submit(r)
+        seq_of[id(r)] = i
+        pending.append(r)
+    # a few cancellations in between must not disturb the order
+    for r in rng.choice(len(pending), size=20, replace=False):
+        assert sched.cancel(pending[int(r)], now=0.0)
+    pending = [r for r in pending if r.finish_reason != "cancelled"]
+    # drain across an advancing clock: pops must match the scan exactly
+    order = []
+    for now in (0.0, 3.5, 7.0, 19.0, 25.0):
+        while True:
+            want = _reference_pop(pending, seq_of, now)
+            got = sched.pop_admissible(now)
+            assert got is want, (now, want and want.rid, got and got.rid)
+            if got is None:
+                break
+            pending.remove(got)
+            order.append(got.rid)
+    assert not pending and sched.done and len(order) == 180
