@@ -80,7 +80,7 @@ class RequestHandle:
         """queued | running | finished | cancelled | rejected"""
         if self._rejected:
             return "rejected"
-        if self.req.finish_reason == "cancelled":
+        if self.req.finish_reason in ("cancelled", "replica_failed"):
             return "cancelled"
         if self.req.finish_reason:
             return "finished"
@@ -453,8 +453,12 @@ class ServingEngine:
         one batched decode step over the whole pool and sample all slots
         in one jitted call. Returns the tokens generated this iteration.
         Each admission and the decode step drive the control plane.
-        Thread-safe; registered step hooks fire before the lock drops."""
+        Thread-safe; registered step hooks fire before the lock drops.
+        A no-op on a closed session — a parked step-loop thread racing a
+        ``close`` must not resurrect a fresh default session."""
         with self._lock:
+            if self._session is None:
+                return []
             events = self._step_impl()
             for fn in list(self._step_hooks):
                 fn(events)

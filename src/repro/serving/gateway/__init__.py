@@ -12,7 +12,8 @@ Layers (each importable alone):
     idle-GB-s scale-down);
   * ``server``   — the stdlib asyncio HTTP/SSE front door.
 """
-from repro.serving.gateway.driver import (Backpressure,  # noqa: F401
+from repro.serving.gateway.driver import (CANCEL_TOKEN,  # noqa: F401
+                                          FAIL_TOKEN, Backpressure,
                                           EngineDriver, ReplicaMeters)
 from repro.serving.gateway.protocol import (CompletionRequest,  # noqa: F401
                                             RequestError, parse_completion)

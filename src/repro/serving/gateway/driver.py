@@ -39,9 +39,13 @@ from typing import Callable
 from repro.serving.engine import RequestHandle, ServingEngine, TokenEvent
 from repro.serving.scheduler import GenRequest
 
-# sentinel token pushed to a sink when its request is cancelled or its
-# replica fails — sinks treat done=True with token < 0 as "no token"
+# sentinel tokens pushed to a sink on abnormal termination — sinks
+# treat done=True with token < 0 as "no token". CANCEL_TOKEN means the
+# client cancelled (disconnect); FAIL_TOKEN means the REPLICA died, so
+# the HTTP layer must surface an error (5xx / finish_reason
+# "replica_failed"), never a fake success
 CANCEL_TOKEN = -1
+FAIL_TOKEN = -2
 
 
 class Backpressure(Exception):
@@ -90,6 +94,8 @@ class EngineDriver:
         self._cv = threading.Condition()
         self._thread: threading.Thread | None = None
         self._stop = False
+        self._closed = False
+        self._close_on_exit = False
         engine.start(num_slots=num_slots, control=control, eos_id=eos_id,
                      time_scale=time_scale)
         engine.add_step_hook(self._on_events)
@@ -135,6 +141,12 @@ class EngineDriver:
         with self.engine._lock:
             self._sinks[rid] = sink
 
+    def unsubscribe(self, rid: int) -> None:
+        """Drop `rid`'s sink (a submission that never made it in —
+        backpressure or admission reject)."""
+        with self.engine._lock:
+            self._sinks.pop(rid, None)
+
     def _on_events(self, events: list[TokenEvent]) -> None:
         for ev in events:
             sink = self._sinks.get(ev.rid)
@@ -166,29 +178,44 @@ class EngineDriver:
             raise
 
     def fail(self, why: str = "") -> None:
-        """Mark the replica unhealthy and deliver terminal events to
-        every waiting sink so no client hangs on a dead replica."""
+        """Mark the replica unhealthy, cancel its in-flight work (KV
+        slots freed, handles carry finish_reason "replica_failed"), and
+        deliver terminal FAIL_TOKEN events to every waiting sink — no
+        client hangs on, or reads a fake success from, a dead replica."""
         self.healthy = False
         with self.engine._lock:
+            sess = self.engine._session
+            if sess is not None:
+                sched = sess.sched
+                doomed = list(sched.pending) + list(sched.running.values())
+                for req in doomed:
+                    sched.cancel(req, sess.now, reason="replica_failed")
             sinks = list(self._sinks.items())
             self._sinks.clear()
         for rid, sink in sinks:
-            sink(TokenEvent(rid, CANCEL_TOKEN, True))
+            sink(TokenEvent(rid, FAIL_TOKEN, True))
         if why:
             print(f"[gateway] replica {self.replica_id} failed:\n{why}")
 
     def _run(self) -> None:
-        while True:
-            with self._cv:
-                while not self._stop and not self.engine.has_work:
-                    self._cv.wait(timeout=0.05)
-                if self._stop:
+        try:
+            while True:
+                with self._cv:
+                    while not self._stop and not self.engine.has_work:
+                        self._cv.wait(timeout=0.05)
+                    if self._stop:
+                        return
+                try:
+                    self.engine.step()
+                except Exception:
+                    self.fail(traceback.format_exc())
                     return
-            try:
-                self.engine.step()
-            except Exception:
-                self.fail(traceback.format_exc())
-                return
+        finally:
+            # retire path (stop(join=False, close=True)): the step
+            # thread releases the session itself as it exits, so an
+            # asyncio caller never blocks on the join
+            if self._close_on_exit:
+                self.close()
 
     def start(self) -> None:
         """Start the background step-loop thread."""
@@ -199,12 +226,38 @@ class EngineDriver:
             daemon=True)
         self._thread.start()
 
-    def stop(self, join: bool = True) -> None:
+    def stop(self, join: bool = True, *, close: bool = False) -> None:
+        """Stop the step loop. ``close=True`` releases the engine
+        session eagerly (see ``close``): synchronously when there is no
+        live thread or after a successful join, otherwise by the step
+        thread itself as it exits — so a ``join=False`` caller (the
+        asyncio autoscale path) never blocks."""
         with self._cv:
             self._stop = True
+            if close:
+                self._close_on_exit = True
             self._cv.notify_all()
-        if join and self._thread is not None:
-            self._thread.join(timeout=5.0)
+        t = self._thread
+        if t is not None and join:
+            t.join(timeout=5.0)
+        if close and (t is None or not t.is_alive()):
+            self.close()
+
+    def close(self) -> None:
+        """Release the engine session now (KV cache, slot banks,
+        control plane) and detach the step hook — breaking the
+        engine<->driver reference cycle so a retired replica stops
+        billing immediately instead of at some future gc pass.
+        Idempotent."""
+        with self.engine._lock:
+            if self._closed:
+                return
+            self._closed = True
+        try:
+            self.engine.remove_step_hook(self._on_events)
+        except ValueError:
+            pass
+        self.engine.close()
 
     # ---------------------------------------------------------- meters
 
@@ -213,6 +266,13 @@ class EngineDriver:
         eng = self.engine
         with eng._lock:
             sess = eng._session
+            if sess is None:           # closed/retired: nothing resident
+                return ReplicaMeters(
+                    replica_id=self.replica_id, healthy=self.healthy,
+                    draining=self.draining, pending=0, running=0,
+                    free_slots=0, outstanding_tokens=0, queue_delay_s=0.0,
+                    completed=0, cancelled=0, clock_s=0.0, gb_s=0.0,
+                    idle=True)
             sched = sess.sched
             gb_s = 0.0
             if sess.runtime is not None:
@@ -238,4 +298,5 @@ class EngineDriver:
     def outstanding_tokens(self) -> int:
         eng = self.engine
         with eng._lock:
-            return eng._sess.sched.outstanding_tokens()
+            sess = eng._session
+            return 0 if sess is None else sess.sched.outstanding_tokens()

@@ -185,13 +185,20 @@ class Router:
         return d
 
     def _retire(self, rid: int) -> None:
+        """Retire a (scale-down, hence idle) replica and release its
+        session EAGERLY — the whole point of scaling down is to stop the
+        resident-GB-s burn now, not at a future gc pass. ``join=False``
+        keeps the asyncio autoscale loop from blocking on the step
+        thread: the thread closes the session itself as it exits (and
+        with no thread — unthreaded bench/tests — the close is
+        synchronous)."""
         d = self.replicas.pop(rid, None)
         if d is not None:
             m = d.meters()
             self._retired_completed += m.completed
             self._retired_cancelled += m.cancelled
             d.draining = True
-            d.stop(join=self.threaded)
+            d.stop(join=False, close=True)
 
     def live_replicas(self) -> list[EngineDriver]:
         return [d for d in self.replicas.values()
@@ -223,18 +230,30 @@ class Router:
                ) -> tuple[EngineDriver, "object"]:
         """Route + submit; optionally installs `sink` for the request's
         token events. Raises ``Backpressure`` (counted) when the chosen
-        replica's pending queue is full."""
+        replica's pending queue is full.
+
+        The sink is installed BEFORE the submit: ``driver.submit`` wakes
+        the background step thread, which can emit the first tokens —
+        for a short request, the whole completion — before control
+        returns here, and events with no sink are dropped. The rid is
+        fresh (``next_rid``), so no stray events can reach the sink
+        before the submit lands; on backpressure/reject it is simply
+        uninstalled."""
         driver = self.route()
+        if sink is not None:
+            driver.subscribe(req.rid, sink)
         try:
             handle = driver.submit(req)
         except Backpressure:
+            if sink is not None:
+                driver.unsubscribe(req.rid)
             self.counters.rejected += 1
             raise
         if handle.status == "rejected":
+            if sink is not None:
+                driver.unsubscribe(req.rid)
             return driver, handle
         self.counters.admitted += 1
-        if sink is not None:
-            driver.subscribe(req.rid, sink)
         return driver, handle
 
     def cancel(self, driver: EngineDriver, handle) -> bool:
@@ -298,7 +317,7 @@ class Router:
 
     def stop(self) -> None:
         for d in self.replicas.values():
-            d.stop(join=self.threaded)
+            d.stop(join=self.threaded, close=True)
 
     def metrics(self) -> dict:
         """The `/metrics` payload: per-replica meters + router counters

@@ -30,7 +30,7 @@ import time
 
 import numpy as np
 
-from repro.serving.gateway.driver import Backpressure
+from repro.serving.gateway.driver import Backpressure, FAIL_TOKEN
 from repro.serving.gateway.protocol import (RequestError, chunk_body,
                                             completion_body, parse_completion,
                                             sse_event, SSE_DONE)
@@ -83,7 +83,12 @@ async def _read_request(reader: asyncio.StreamReader):
             break
         name, _, value = h.decode("latin-1").partition(":")
         headers[name.strip().lower()] = value.strip()
-    length = int(headers.get("content-length", "0") or "0")
+    try:
+        length = int(headers.get("content-length", "0") or "0")
+    except ValueError:
+        raise RequestError(400, "invalid Content-Length header")
+    if length < 0:
+        raise RequestError(400, "invalid Content-Length header")
     if length > _MAX_BODY:
         raise RequestError(413, "request body too large")
     body = await reader.readexactly(length) if length else b""
@@ -267,10 +272,17 @@ class GatewayServer:
                 tokens.append(int(ev.token))
             if ev.done:
                 break
+        if ev.token == FAIL_TOKEN \
+                or handle.finish_reason == "replica_failed":
+            # the replica died mid-request: partial tokens are NOT a
+            # success — surface a 5xx, never finish_reason "cancelled"
+            raise RequestError(
+                503, f"replica failed mid-request "
+                     f"({len(tokens)} tokens generated)",
+                etype="server_error")
         reason = handle.finish_reason or "cancelled"
         if reason == "cancelled" and not tokens:
-            raise RequestError(503, "request cancelled server-side "
-                                    "(replica failed)",
+            raise RequestError(503, "request cancelled server-side",
                                etype="server_error")
         m = handle.metrics()
         writer.write(_json_response(200, completion_body(
@@ -295,7 +307,10 @@ class GatewayServer:
                     await writer.drain()
                 if ev.done:
                     break
-            reason = handle.finish_reason or "cancelled"
+            # the SSE 200 is already on the wire — a replica failure
+            # surfaces as an explicit terminal finish_reason instead
+            reason = "replica_failed" if ev.token == FAIL_TOKEN \
+                else handle.finish_reason or "cancelled"
             writer.write(sse_event(chunk_body(req_id, creq, None, reason,
                                               created)))
             writer.write(SSE_DONE)

@@ -101,7 +101,7 @@ class GenRequest:
     t_admitted: float = math.nan
     t_first_token: float = math.nan
     t_finish: float = math.nan
-    finish_reason: str = ""            # length | eos | stop | cancelled
+    finish_reason: str = ""    # length | eos | stop | cancelled | replica_failed
 
     @property
     def prompt_len(self) -> int:
@@ -293,11 +293,15 @@ class ContinuousBatchingScheduler:
         self.finished.append(req)
         return True
 
-    def cancel(self, req: GenRequest, now: float) -> bool:
+    def cancel(self, req: GenRequest, now: float, *,
+               reason: str = "cancelled") -> bool:
         """Client-side cancellation: a pending request leaves the queue;
         a running request releases its KV slot immediately (mid-decode —
         the freed slot admits the next pending arrival on the very next
-        iteration). Returns False if the request already left."""
+        iteration). Returns False if the request already left. `reason`
+        distinguishes a deliberate cancel from a replica failure
+        ("replica_failed") — either way the request lands in
+        ``cancelled``."""
         if self._live.get(id(req)) is req:
             # remove by IDENTITY (dataclass __eq__ compares numpy prompt
             # arrays — ambiguous-truth crash); the heaps drop their now-
@@ -310,7 +314,7 @@ class ContinuousBatchingScheduler:
             self.kv.release(req.slot)
         else:
             return False
-        req.finish_reason = "cancelled"
+        req.finish_reason = reason
         req.t_finish = now
         self.cancelled.append(req)
         return True

@@ -18,10 +18,10 @@ import pytest
 from repro.configs import get_config
 from repro.models import model as M
 from repro.serving.engine import ServingEngine
-from repro.serving.gateway import (Autoscaler, AutoscalerConfig,
-                                   EngineDriver, GatewayServer,
-                                   ReplicaMeters, RequestError, Router,
-                                   parse_completion)
+from repro.serving.gateway import (FAIL_TOKEN, Autoscaler,
+                                   AutoscalerConfig, EngineDriver,
+                                   GatewayServer, ReplicaMeters,
+                                   RequestError, Router, parse_completion)
 from repro.serving.scheduler import GenRequest, SamplingParams
 
 KEY = jax.random.PRNGKey(0)
@@ -272,6 +272,145 @@ def test_router_failover_unhealthy_replica(setup):
         assert [int(t) for t in h1.tokens] == expected
     finally:
         router.stop()
+
+
+def test_sink_installed_before_submit(setup):
+    """Regression: driver.submit wakes the step thread, which can emit
+    a short request's ENTIRE completion before Router.submit returns —
+    the sink must be installed before the submit so no event is
+    dropped."""
+    cfg, params = setup
+
+    class EagerDriver(EngineDriver):
+        """Simulates the step thread winning the race: the request is
+        fully decoded inside submit(), before the caller regains
+        control."""
+
+        def submit(self, req):
+            h = super().submit(req)
+            while h.status in ("queued", "running"):
+                self.step_once()
+            return h
+
+    def factory(i):
+        eng = ServingEngine(cfg, params, max_len=MAX_LEN)
+        return EagerDriver(eng, replica_id=i, num_slots=1, max_pending=4)
+
+    router = Router(factory, threaded=False)
+    try:
+        got = []
+        req = GenRequest(rid=router.next_rid(), arrival=float("nan"),
+                         prompt=np.asarray(PROMPT, np.int32),
+                         max_new_tokens=3)
+        _, h = router.submit(req, sink=got.append)
+        assert h.status == "finished"
+        assert [e.token for e in got if e.token >= 0] \
+            == [int(t) for t in h.tokens]
+        assert got and got[-1].done
+    finally:
+        router.stop()
+
+
+def test_replica_fail_cancels_inflight(setup):
+    """fail() frees the KV slots of in-flight work, marks the handles
+    'replica_failed' (status 'cancelled', not a fake success) and
+    pushes a FAIL_TOKEN terminal event; stop(close=True) releases the
+    session eagerly."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, max_len=MAX_LEN)
+    d = EngineDriver(eng, replica_id=0, num_slots=1, max_pending=4)
+    got = []
+    req = GenRequest(rid=0, arrival=float("nan"),
+                     prompt=np.asarray(PROMPT, np.int32),
+                     max_new_tokens=8)
+    h = d.submit(req)
+    d.subscribe(req.rid, got.append)
+    d.step_once()                           # prefill: now mid-decode
+    assert h.status == "running"
+    d.fail()
+    assert got and got[-1].done and got[-1].token == FAIL_TOKEN
+    assert h.finish_reason == "replica_failed"
+    assert h.status == "cancelled"
+    m = d.meters()
+    assert (m.pending, m.running, m.free_slots) == (0, 0, 1)
+    d.stop(close=True)
+    assert eng._session is None
+
+
+def test_retire_releases_engine_session(setup):
+    """Scale-down must stop the resident burn NOW: the retired
+    replica's engine session is closed eagerly, not left to a future
+    gc pass of the engine<->driver reference cycle."""
+    cfg, params = setup
+    made = []
+
+    def factory(i):
+        d = EngineDriver(ServingEngine(cfg, params, max_len=MAX_LEN),
+                         replica_id=i, num_slots=1, max_pending=4)
+        made.append(d)
+        return d
+
+    router = Router(factory, threaded=False,
+                    scaler=AutoscalerConfig(min_replicas=1,
+                                            max_replicas=2,
+                                            idle_gb_s_down=1e-12,
+                                            cooldown_s=0.0))
+    try:
+        router._spawn()                    # fleet of 2, both idle
+        for i in range(1, 4):
+            router.autoscale(0.1 * i)      # idle burn accrues -> retire
+        assert len(router.replicas) == 1
+        assert router.counters.scale_downs == 1
+        retired, = [d for d in made
+                    if d.replica_id not in router.replicas]
+        assert retired.engine._session is None
+    finally:
+        router.stop()
+
+
+def test_unary_replica_failure_returns_503(setup):
+    """A replica dying mid-request surfaces as HTTP 503 (server_error),
+    not a 200 with finish_reason 'cancelled'."""
+    cfg, params = setup
+
+    def factory(i):
+        eng = ServingEngine(cfg, params, max_len=MAX_LEN)
+        return EngineDriver(eng, replica_id=i, num_slots=1,
+                            max_pending=4)
+
+    hosted = _Loop(Router(factory, threaded=False))
+    try:
+        with ThreadPoolExecutor(1) as ex:
+            fut = ex.submit(_post, hosted.port, "/v1/completions",
+                            {"prompt": PROMPT, "max_tokens": 4})
+            deadline = time.monotonic() + 30
+            while time.monotonic() < deadline:   # queued, never stepped
+                if hosted.router.metrics()["replicas"][0]["pending"]:
+                    break
+                time.sleep(0.005)
+            hosted.router.mark_unhealthy(0)
+            st, _, raw = fut.result(timeout=30)
+        assert st == 503, raw
+        assert json.loads(raw)["error"]["type"] == "server_error"
+    finally:
+        hosted.close()
+
+
+def test_malformed_content_length_400(gateway):
+    """'Content-Length: abc' is a client error (400), not a 500."""
+    sock = socket.create_connection(("127.0.0.1", gateway.port))
+    try:
+        sock.sendall(b"POST /v1/completions HTTP/1.1\r\nHost: x\r\n"
+                     b"Content-Length: abc\r\n\r\n")
+        buf = b""
+        while b"\r\n\r\n" not in buf:
+            chunk = sock.recv(4096)
+            if not chunk:
+                break
+            buf += chunk
+        assert buf.startswith(b"HTTP/1.1 400 "), buf
+    finally:
+        sock.close()
 
 
 # ----------------------------------------------- protocol validation
