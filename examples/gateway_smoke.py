@@ -1,7 +1,14 @@
 """End-to-end gateway smoke: boot ``launch/serve.py --gateway`` as a
-subprocess, hit it over real HTTP, and assert the tokens are
-bit-identical to an offline ``engine.serve()`` run with the same
-config/seed/prompt — the gateway's core acceptance criterion.
+subprocess (expert runtime ON, so every telemetry subsystem is live),
+hit it over real HTTP, and assert
+
+  * the tokens are bit-identical to an offline ``engine.serve()`` run
+    with the same config/seed/prompt (and no expert runtime — the
+    greedy EP-vs-dispatch equivalence rides along for free);
+  * ``GET /metrics`` is valid Prometheus text exposition (every line
+    parses) containing counter+gauge+histogram families from each of
+    scheduler / engine / expert runtime / control plane / router;
+  * ``GET /metrics.json`` still serves the JSON meters payload.
 
 Run from the repo root (CI does):
 
@@ -14,6 +21,7 @@ from __future__ import annotations
 import http.client
 import json
 import os
+import re
 import subprocess
 import sys
 import time
@@ -64,7 +72,7 @@ def boot_gateway() -> tuple[subprocess.Popen, int]:
         [sys.executable, "-m", "repro.launch.serve", "--gateway",
          "--port", "0", "--replicas", "1", "--slots", str(SLOTS),
          "--prompt-len", str(len(PROMPT)), "--gen", str(GEN),
-         "--arch", ARCH, "--seed", "0"],
+         "--arch", ARCH, "--seed", "0", "--expert-runtime", "on"],
         env=env, cwd=ROOT, stdout=subprocess.PIPE,
         stderr=subprocess.STDOUT, text=True)
     deadline = time.monotonic() + BOOT_TIMEOUT_S
@@ -91,6 +99,75 @@ def request(port: int, method: str, path: str, body: dict | None = None):
     data = resp.read()
     conn.close()
     return resp.status, data
+
+
+_SAMPLE_RE = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(\{[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"'
+    r'(?:,[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*")*\})?'
+    r' (-?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?|[+-]Inf|NaN)$')
+
+
+def parse_exposition(text: str) -> tuple[dict, dict]:
+    """Small Prometheus text-format 0.0.4 parser: every non-comment
+    line must match ``name{labels} value``. Returns ({family: kind},
+    {series: value})."""
+    types: dict[str, str] = {}
+    samples: dict[str, float] = {}
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(" ", 3)
+            assert kind in ("counter", "gauge", "histogram"), \
+                f"unknown TYPE: {line!r}"
+            types[name] = kind
+        elif line.startswith("# HELP "):
+            continue
+        elif line.startswith("#"):
+            raise AssertionError(f"unexpected comment line: {line!r}")
+        else:
+            m = _SAMPLE_RE.match(line)
+            assert m, f"malformed sample line: {line!r}"
+            samples[m.group(1) + (m.group(2) or "")] = float(
+                m.group(3).replace("+Inf", "inf").replace("-Inf", "-inf"))
+    return types, samples
+
+
+# one (counter, gauge, histogram) triple per instrumented subsystem —
+# the PR's acceptance criterion for the exposition
+REQUIRED_FAMILIES = {
+    "scheduler": ("scheduler_admitted_total", "scheduler_pending",
+                  "scheduler_queue_delay_seconds"),
+    "engine": ("engine_steps_total", "engine_batch_occupancy",
+               "engine_step_seconds"),
+    "runtime": ("runtime_replica_starts_total", "runtime_resident_replicas",
+                "runtime_bank_flush_seconds"),
+    "control": ("control_iterations_total", "control_pred_load_l1_error",
+                "control_layer_latency_seconds"),
+    "router": ("router_requests_total", "router_replicas",
+               "router_http_request_seconds"),
+}
+
+
+def check_exposition(text: str) -> None:
+    types, samples = parse_exposition(text)
+    for subsystem, (ctr, gau, hist) in REQUIRED_FAMILIES.items():
+        assert types.get(ctr) == "counter", (subsystem, ctr, types.get(ctr))
+        assert types.get(gau) == "gauge", (subsystem, gau, types.get(gau))
+        assert types.get(hist) == "histogram", \
+            (subsystem, hist, types.get(hist))
+    assert samples["scheduler_admitted_total"] >= 2, samples
+    assert samples['engine_steps_total{phase="decode"}'] >= 1
+    assert samples['control_iterations_total{phase="decode"}'] >= 1
+    # per-layer L1 error gauges, one per MoE layer
+    l1 = [k for k in samples if k.startswith("control_pred_load_l1_error{")]
+    assert l1, "no per-layer control_pred_load_l1_error series"
+    assert samples['router_requests_total{outcome="admitted"}'] >= 2
+    assert samples["scheduler_queue_delay_seconds_count"] >= 2
+    starts = sum(v for k, v in samples.items()
+                 if k.startswith("runtime_replica_starts_total{"))
+    assert starts > 0, "expert runtime recorded no replica starts"
 
 
 def sse_tokens(raw: bytes) -> tuple[list[int], str | None]:
@@ -139,10 +216,17 @@ def main() -> None:
         print(f"SSE stream OK: {got}")
 
         st, raw = request(port, "GET", "/metrics")
+        assert st == 200, (st, raw[:200])
+        check_exposition(raw.decode())
+        print(f"/metrics exposition OK ({len(raw.splitlines())} lines, "
+              f"all 5 subsystems present)")
+
+        st, raw = request(port, "GET", "/metrics.json")
         m = json.loads(raw)["router"]
         assert st == 200 and m["admitted"] >= 2 \
             and m["completed"] >= 2 and m["rejected"] == 0, m
-        print(f"metrics OK: {m}")
+        assert "scale_events_total" in m, m
+        print(f"/metrics.json OK: {m}")
     finally:
         proc.terminate()
         try:

@@ -70,6 +70,11 @@ def run_real_model(args):
     # deterministic across runs, but requests never share a stream
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
+    tracer = tel = None
+    if args.trace_out:
+        from repro.obs import Telemetry, Tracer
+        tracer = Tracer(process_name="serve-trace")
+        tel = Telemetry(tracer=tracer)
     for ai, arch in enumerate(("mixtral-8x7b", "phi-3.5-moe")):
         cfg = get_config(arch, smoke=True).with_(dtype="float32",
                                                  impl=args.impl)
@@ -98,12 +103,18 @@ def run_real_model(args):
               f"{'E2E p50/p99 ms':>17s} {'layer ms':>9s} {'cost':>9s}")
         clip = None
         for strategy in STRATEGIES:
+            # per-(arch, strategy) trace tracks: each replay has its own
+            # serving clock starting at t=0, so sharing a track would
+            # break per-track timestamp monotonicity
             engine = ServingEngine(cfg, params, max_len=args.max_len,
-                                   expert_runtime=args.expert_runtime)
+                                   expert_runtime=args.expert_runtime,
+                                   telemetry=tel,
+                                   name=f"{arch}/{strategy}")
             control = ControlPlane(
                 cfg, strategy, num_devices=args.devices,
                 predictor=predictor if strategy == "moeless" else None,
-                prediction_distance=args.distance)
+                prediction_distance=args.distance, telemetry=tel,
+                track=f"{arch}/{strategy}/control")
             # identical trace replayed per strategy (fresh request
             # objects); only the control plane — and hence the modeled
             # serving clock — differs
@@ -130,12 +141,19 @@ def run_real_model(args):
                   f"{s['tpot']['p50']*1e3:8.3f}/{s['tpot']['p99']*1e3:8.3f} "
                   f"{s['e2e']['p50']*1e3:8.1f}/{s['e2e']['p99']*1e3:8.1f} "
                   f"{control.mean_layer_ms():9.4f} {control.cost:9.3g} "
-                  f"[{res.wall_s:.1f}s wall, "
+                  f"[e2e mean {s['e2e']['mean']*1e3:.1f}ms over "
+                  f"n={s['e2e']['count']} "
+                  f"(tpot n={s['tpot']['count']}), "
+                  f"{res.wall_s:.1f}s wall, "
                   f"{control.host_transfers} host syncs, "
                   f"{res.dropped_tokens:.0f} dropped{rt_info}]")
         if clip is not None and clip.any:
             print(f"note: trace clipped to fit max_len={args.max_len} "
                   f"slots ({clip})")
+    if tracer is not None:
+        n = tracer.write(args.trace_out)
+        print(f"\nwrote {n} trace events to {args.trace_out} "
+              "(load in https://ui.perfetto.dev)")
 
 
 def main():
@@ -188,8 +206,14 @@ def main():
                          "faster than the full models the trace was "
                          "shaped for; scaling restores a realistic "
                          "arrival/service ratio so batches actually fill")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the "
+                         "real-model replay (Perfetto / chrome://tracing)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.trace_out and not args.real_model:
+        ap.error("--trace-out requires --real-model (the simulator path "
+                 "has no serving engine to trace)")
     if args.real_model:
         run_real_model(args)
     else:

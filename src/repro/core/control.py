@@ -188,7 +188,9 @@ class ControlPlane:
     def __init__(self, cfg, strategy: str, *, num_devices: int = 8,
                  predictor=None, error_model=None,
                  prediction_distance: int = 1, cv_threshold: float = 0.2,
-                 seed: int = 0, prewarm: bool = True, **bal_kw):
+                 seed: int = 0, prewarm: bool = True, telemetry=None,
+                 track: str = "control", straggler_factor: float = 2.0,
+                 **bal_kw):
         assert cfg.is_moe, "control plane serves MoE models"
         if predictor is not None and error_model is not None:
             raise ValueError("pass a LoadPredictor or a PredictorErrorModel"
@@ -207,6 +209,14 @@ class ControlPlane:
             num_layers=self.n_layers,
             **({"cv_threshold": cv_threshold} if strategy == "moeless"
                else {}), **bal_kw)
+        from repro.obs.telemetry import NOOP
+        # observation-only: never touches plans, latency, or cost.
+        # `track` names this plane's trace lane; a layer whose max/mean
+        # load exceeds `straggler_factor` is flagged (paper §4 straggler
+        # identification) as a counter bump + instant trace event.
+        self.telemetry = NOOP if telemetry is None else telemetry
+        self.track = track
+        self.straggler_factor = straggler_factor
         self.m_misc = CM.misc_memory_bytes(cfg)
         self.full_expert_bytes = (self.n_layers * cfg.moe.num_experts
                                   * self.coeffs.expert_bytes)
@@ -266,13 +276,18 @@ class ControlPlane:
         ``phase_dropped``."""
         pred, acts, drp = self._loads(gate_inputs, actual_loads,
                                       token_mask, dropped)
+        tel = self.telemetry
         self.phase_iterations[phase] = \
             self.phase_iterations.get(phase, 0) + 1
+        if tel.enabled:
+            tel.control_iterations.labels(phase=phase).inc()
         if drp is not None:
             d = float(np.sum(drp))
             self.dropped_tokens += d
             self.phase_dropped[phase] = \
                 self.phase_dropped.get(phase, 0.0) + d
+            if tel.enabled:
+                tel.control_dropped.labels(phase=phase).inc(d)
         total = 0.0
         cost0 = self.cost
         serverless = bool(getattr(self.bal, "serverless", False))
@@ -304,6 +319,23 @@ class ControlPlane:
                     exec_time=MOELESS_EXEC_TIME, serverless=True))
             else:
                 events.append(PlanEvent(plan=plan, served=plan))
+            if tel.enabled:
+                # the paper's Fig. 11/12 signals, per layer: predicted vs
+                # actual load L1 error, and the max/mean imbalance factor
+                # whose excess flags a straggler
+                tel.control_layer_latency.observe(t_fwd)
+                tel.control_l1_error.labels(layer=l).set(
+                    float(np.abs(pred[l] - acts[l]).sum()))
+                mx = float(acts[l].max()) if acts[l].size else 0.0
+                mean = float(acts[l].mean()) if acts[l].size else 0.0
+                imb = mx / mean if mean > 0 else 0.0
+                tel.control_imbalance.labels(layer=l).set(imb)
+                tel.control_load_max.labels(layer=l).set(mx)
+                tel.control_load_mean.labels(layer=l).set(mean)
+                if imb > self.straggler_factor:
+                    tel.control_stragglers.inc()
+                    tel.instant(self.track, "straggler", t,
+                                args={"layer": l, "imbalance": imb})
         self.iter_latency.append(total)
         self.iterations += 1
         self.last_plans = plans
@@ -329,14 +361,17 @@ class MoElessController(ControlPlane):
 
     def __init__(self, cfg, *, num_devices: int = 8,
                  cv_threshold: float = 0.2, prediction_distance: int = 1,
-                 slots_per_device: int = 0, predictor=None):
+                 slots_per_device: int = 0, predictor=None,
+                 telemetry=None, track: str = "control",
+                 straggler_factor: float = 2.0):
         e = cfg.moe.num_experts
         self.slots_per_device = slots_per_device \
             or default_slots_per_device(e, num_devices)
         super().__init__(
             cfg, "moeless", num_devices=num_devices, predictor=predictor,
             prediction_distance=prediction_distance,
-            cv_threshold=cv_threshold,
+            cv_threshold=cv_threshold, telemetry=telemetry, track=track,
+            straggler_factor=straggler_factor,
             max_replicas_per_device=self.slots_per_device)
 
     def pool(self, layer: int):

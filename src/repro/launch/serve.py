@@ -39,26 +39,38 @@ def _parse_replicas(spec: str) -> tuple[int, int]:
 def _run_gateway(args, cfg, params, max_len: int) -> None:
     import asyncio
 
+    from repro.obs import Telemetry, Tracer
     from repro.serving.engine import MoElessController, ServingEngine
     from repro.serving.gateway import (AutoscalerConfig, EngineDriver,
                                        GatewayServer, Router)
 
     lo, hi = _parse_replicas(args.replicas)
-    use_ctrl = cfg.is_moe and not args.no_moeless \
-        and args.expert_runtime == "on"
+    # the gateway always serves /metrics, so telemetry is always live
+    # here (offline one-shot runs keep the zero-overhead NOOP default);
+    # a session control plane is attached to every MoE replica so the
+    # control-plane families (pred-vs-actual L1 error, imbalance,
+    # stragglers) are populated even without the expert runtime —
+    # generated tokens are unchanged either way (a tested invariant)
+    tracer = Tracer(process_name="repro-gateway") if args.trace_out \
+        else None
+    tel = Telemetry(tracer=tracer)
+    use_ctrl = cfg.is_moe and not args.no_moeless
 
     def factory(i: int) -> EngineDriver:
-        # each replica owns its engine, session, and (when the expert
-        # runtime executes plans) its own control plane — controllers
-        # hold per-balancer mutable state and must never be shared
-        ctrl = MoElessController(cfg, num_devices=args.devices) \
+        # each replica owns its engine, session, and control plane —
+        # controllers hold per-balancer mutable state and must never be
+        # shared; all replicas share the ONE process-wide registry
+        ctrl = MoElessController(cfg, num_devices=args.devices,
+                                 telemetry=tel,
+                                 track=f"replica{i}/control") \
             if use_ctrl else None
         eng = ServingEngine(cfg, params, max_len=max_len, impl=args.impl,
-                            expert_runtime=args.expert_runtime)
+                            expert_runtime=args.expert_runtime,
+                            telemetry=tel, name=f"replica{i}")
         return EngineDriver(eng, replica_id=i, num_slots=args.slots,
                             max_pending=args.max_pending, control=ctrl)
 
-    router = Router(factory, scaler=AutoscalerConfig(
+    router = Router(factory, telemetry=tel, scaler=AutoscalerConfig(
         min_replicas=lo, max_replicas=hi,
         queue_delay_up_s=args.scale_up_delay,
         idle_gb_s_down=args.scale_down_idle_gb_s))
@@ -81,6 +93,10 @@ def _run_gateway(args, cfg, params, max_len: int) -> None:
         pass
     finally:
         router.stop()
+        if tracer is not None:
+            n = tracer.write(args.trace_out)
+            print(f"wrote {n} trace events to {args.trace_out} "
+                  "(load in https://ui.perfetto.dev)")
 
 
 def main(argv=None):
@@ -136,6 +152,9 @@ def main(argv=None):
                     help="sustained queue delay (s) that adds a replica")
     ap.add_argument("--scale-down-idle-gb-s", type=float, default=1.0,
                     help="idle GB-s burn that retires a replica")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(load in Perfetto / chrome://tracing)")
     args = ap.parse_args(argv)
 
     if args.host_devices:
@@ -165,9 +184,15 @@ def main(argv=None):
         max_len = args.max_len or args.prompt_len + args.gen + 1
         _run_gateway(args, cfg, params, max_len)
         return
+    tel = tracer = None
+    if args.trace_out:
+        from repro.obs import Telemetry, Tracer
+        tracer = Tracer()
+        tel = Telemetry(tracer=tracer)
     ctrl = None
     if cfg.is_moe and not args.no_moeless:
-        ctrl = MoElessController(cfg, num_devices=args.devices)
+        ctrl = MoElessController(cfg, num_devices=args.devices,
+                                 telemetry=tel)
     if args.expert_runtime == "on" and ctrl is None:
         raise SystemExit("--expert-runtime on needs an MoE arch with the "
                          "MoEless control plane (drop --no-moeless)")
@@ -189,7 +214,7 @@ def main(argv=None):
                            controller=None if session_ctrl else ctrl,
                            impl=args.impl,
                            expert_runtime=args.expert_runtime,
-                           mesh=mesh)
+                           mesh=mesh, telemetry=tel)
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
     rng = np.random.default_rng(args.seed)
@@ -230,6 +255,10 @@ def main(argv=None):
                      for r, b in sorted(st.rank_bytes.items())}))
     print("sample continuations:",
           np.asarray([h.tokens[:8] for h in handles[:2]]))
+    if tracer is not None:
+        n = tracer.write(args.trace_out)
+        print(f"wrote {n} trace events to {args.trace_out} "
+              "(load in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,7 @@ import numpy as np
 from repro.core.control import (ControlPlane,  # noqa: F401 (re-export)
                                 IterationOutcome, MoElessController)
 from repro.models import transformer as T
+from repro.obs.telemetry import NOOP
 from repro.serving.kv import SlotKVCache
 from repro.serving.scheduler import (ContinuousBatchingScheduler, GenRequest,
                                      RequestMetrics, SamplingParams,
@@ -177,7 +178,8 @@ class ServingEngine:
     def __init__(self, cfg, params, *, max_len: int = 512,
                  controller: ControlPlane | None = None,
                  window: int = 0, impl: str | None = None,
-                 expert_runtime: str = "off", mesh=None):
+                 expert_runtime: str = "off", mesh=None,
+                 telemetry=None, name: str = "engine"):
         if impl is not None:   # override the config's kernel backend
             from repro.kernels.ops import resolve_impl
             resolve_impl(impl)   # validate eagerly, not at first step
@@ -190,6 +192,13 @@ class ServingEngine:
         self.cfg, self.params = cfg, params
         self.max_len = max_len
         self.controller = controller
+        # telemetry is observation-only: it never touches the serving
+        # clock or routing, so an instrumented run generates the same
+        # tokens/metrics as a NOOP one. `name` prefixes this engine's
+        # trace tracks (per-replica / per-strategy lanes).
+        self.telemetry = NOOP if telemetry is None else telemetry
+        self.name = name
+        self._marks: dict[int, float] = {}   # rid -> prefill-end clock t
         self.window = window
         self.expert_runtime = expert_runtime
         self._steps: dict[bool, callable] = {}
@@ -385,7 +394,9 @@ class ServingEngine:
                 self._ep_mesh = jax.make_mesh((1, 1, 1),
                                               ("data", "ep", "tp"))
             runtime = ExpertRuntime.for_control(
-                self.cfg, self.params, control, mesh=self._ep_mesh)
+                self.cfg, self.params, control, mesh=self._ep_mesh,
+                telemetry=self.telemetry,
+                track=f"{self.name}/runtime")
             runtime.bootstrap(control)
             batch_mult = (self._ep_mesh.shape["data"]
                           * self._ep_mesh.shape["ep"])
@@ -434,6 +445,12 @@ class ServingEngine:
             if math.isnan(req.arrival):
                 req.arrival = sess.now
             ok = sess.sched.submit(req)
+            tel = self.telemetry
+            if tel.enabled:
+                if ok:
+                    tel.sched_pending.set(len(sess.sched.pending))
+                else:
+                    tel.sched_rejected.labels(reason="capacity").inc()
             return RequestHandle(req, self, _rejected=not ok)
 
     def cancel(self, handle: RequestHandle) -> bool:
@@ -445,7 +462,14 @@ class ServingEngine:
             sess = self._session
             if sess is None:
                 return False
-            return sess.sched.cancel(handle.req, sess.now)
+            ok = sess.sched.cancel(handle.req, sess.now)
+            tel = self.telemetry
+            if ok and tel.enabled:
+                tel.sched_cancelled.inc()
+                self._marks.pop(handle.req.rid, None)
+                tel.instant(f"{self.name}/req{handle.req.rid}", "cancel",
+                            sess.now)
+            return ok
 
     def step(self) -> list[TokenEvent]:
         """ONE serving iteration: admit every arrived request that fits a
@@ -477,9 +501,11 @@ class ServingEngine:
         collect = self._collect or (
             sess.control is not None and sess.control.predictor is not None
             and self.cfg.is_moe)
+        tel = self.telemetry
         # admission: prefill every arrived request that fits a slot
         while (req := sched.pop_admissible(sess.now)) is not None:
             t0 = time.perf_counter()
+            t_admit = sess.now
             tok, cache1, plen, metrics, mask = self.prefill_request(
                 req.prompt, collect=collect, sampling=req.sampling,
                 rid=req.rid)
@@ -507,11 +533,30 @@ class ServingEngine:
             sess.count[slot] = 1
             done = sched.on_token(slot, tok, sess.now)  # TTFT: prefill end
             events.append(TokenEvent(req.rid, tok, done))
+            if tel.enabled:
+                tel.sched_admitted.inc()
+                tel.sched_queue_delay.observe(
+                    max(t_admit - req.arrival, 0.0))
+                tel.engine_steps.labels(phase="prefill").inc()
+                tel.engine_step_seconds.labels(phase="prefill").observe(
+                    time.perf_counter() - t0)
+                tel.engine_tokens.inc()
+                if tel.tracing:
+                    track = f"{self.name}/req{req.rid}"
+                    tel.span(track, "queue", req.arrival, t_admit)
+                    tel.span(track, "prefill", t_admit, sess.now,
+                             args={"prompt_len": plen})
+                    self._marks[req.rid] = sess.now
+                if done:
+                    self._finish_req(req, sess.now)
+        if tel.enabled:
+            tel.sched_pending.set(len(sched.pending))
         if not sched.running:
             return events
         # one batched decode step over the whole pool (static shapes),
         # then one jitted sampling call over every slot
         t0 = time.perf_counter()
+        t_clock0 = sess.now
         lengths, active = kv.step_lengths()
         batch = {"tokens": jnp.asarray(sess.cur[:, None]), "active": active}
         if sess.runtime is not None:
@@ -530,6 +575,7 @@ class ServingEngine:
             step_fn = self._get_step(collect)
             logits, kv.cache, metrics = step_fn(
                 self.params, batch, kv.cache, lengths)
+        t_sync = time.perf_counter()
         if any(sess.temp[s] > 0 for s in sched.running):
             toks = np.asarray(T.sample_tokens(
                 logits[:, -1], jnp.asarray(sess.temp),
@@ -537,6 +583,7 @@ class ServingEngine:
                 jnp.asarray(sess.seed), jnp.asarray(sess.count)))
         else:   # all-greedy batch: skip the sampler's per-slot sort work
             toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        sync_s = time.perf_counter() - t_sync   # device->host token fetch
         dt = None
         if sess.control is not None and "expert_load" in metrics:
             out = sess.control.step(
@@ -553,7 +600,18 @@ class ServingEngine:
         sess.now += dt * sess.time_scale
         sess.iters += 1
         self.iteration += 1
-        sess.occupancy.append(len(sched.running))
+        n_active = len(sched.running)
+        sess.occupancy.append(n_active)
+        if tel.enabled:
+            tel.engine_steps.labels(phase="decode").inc()
+            tel.engine_step_seconds.labels(phase="decode").observe(
+                time.perf_counter() - t0)
+            tel.engine_host_sync.observe(sync_s)
+            tel.engine_occupancy.set(n_active)
+            tel.engine_tokens.inc(n_active)
+            if tel.tracing:
+                tel.span(self.name, "decode_step", t_clock0, sess.now,
+                         args={"occupancy": n_active})
         kv.advance()
         for slot in list(sched.running):
             tok = int(toks[slot])
@@ -562,7 +620,21 @@ class ServingEngine:
             req = sched.running[slot]
             done = sched.on_token(slot, tok, sess.now)
             events.append(TokenEvent(req.rid, tok, done))
+            if done and tel.enabled:
+                self._finish_req(req, sess.now)
         return events
+
+    def _finish_req(self, req: GenRequest, t: float) -> None:
+        """Record one request's terminal telemetry (finish counter +
+        closing decode span / finish instant on its trace track)."""
+        tel = self.telemetry
+        tel.sched_finished.labels(reason=req.finish_reason or "done").inc()
+        if tel.tracing:
+            track = f"{self.name}/req{req.rid}"
+            tel.span(track, "decode", self._marks.pop(req.rid, t), t)
+            tel.instant(track, "finish", t,
+                        args={"reason": req.finish_reason,
+                              "out_tokens": len(req.tokens)})
 
     def stream(self, handle: RequestHandle) -> Iterator[int]:
         """Incrementally yield `handle`'s tokens, driving ``step`` while

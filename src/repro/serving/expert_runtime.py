@@ -70,6 +70,7 @@ where served == plan) are ``exposed``.
 from __future__ import annotations
 
 import math
+import time
 import warnings
 from dataclasses import dataclass, field
 
@@ -158,8 +159,13 @@ class ExpertRuntime:
     def __init__(self, cfg, params, *, num_devices: int,
                  slots_per_device: int = 0, mesh=None,
                  keep_alive: float = 60.0, hw: Hardware = V5E,
-                 coeffs=None, double_buffer: bool = True):
+                 coeffs=None, double_buffer: bool = True,
+                 telemetry=None, track: str = "runtime"):
         assert cfg.is_moe, "expert runtime serves MoE models"
+        from repro.obs.telemetry import NOOP
+        # observation-only; `track` names this runtime's trace lane
+        self.telemetry = NOOP if telemetry is None else telemetry
+        self.track = track
         if cfg.act != "swiglu":
             raise NotImplementedError(
                 "EP slot banks hold swiglu experts (w_gate/w_up/w_down); "
@@ -291,7 +297,8 @@ class ExpertRuntime:
 
     @classmethod
     def for_control(cls, cfg, params, control, *, mesh=None,
-                    keep_alive: float | None = None):
+                    keep_alive: float | None = None, telemetry=None,
+                    track: str = "runtime"):
         """Runtime sized to a ``ControlPlane``: same modeled device
         count, same slot caps, same cost coefficients and keep-alive —
         the preconditions for count/billing parity with the analytic
@@ -302,7 +309,7 @@ class ExpertRuntime:
             or getattr(control.bal, "max_replicas_per_device", 0)
         return cls(cfg, params, num_devices=control.num_devices,
                    slots_per_device=sd, mesh=mesh, keep_alive=keep_alive,
-                   coeffs=control.coeffs)
+                   coeffs=control.coeffs, telemetry=telemetry, track=track)
 
     def bootstrap(self, control=None, t: float = 0.0) -> ApplyReport:
         """Install an initial deployment so the EP data plane has live
@@ -412,6 +419,7 @@ class ExpertRuntime:
         rep = ApplyReport()
         rep.rank_bytes = {f"rank{r}": 0.0 for r in range(self.ep)}
         evict0 = self.stats.evictions
+        hidden0 = self.stats.overlap_hidden_s
         updates = {j: ([], [], []) for j in self.moe_positions}
         for layer, ev in enumerate(events):
             self._reap(layer, t)
@@ -479,7 +487,9 @@ class ExpertRuntime:
             rep.per_layer_transfers.append(n_transfer)
             self._build_tables(layer, ev.served)
         rep.evictions = self.stats.evictions - evict0
+        t_w0 = time.perf_counter()
         self._flush(updates)
+        flush_wall = time.perf_counter() - t_w0
         self._have_tables = True
         self.iterations += 1
         ph = self.stats.phase(phase)
@@ -489,6 +499,39 @@ class ExpertRuntime:
         ph["prewarmed"] += rep.prewarmed
         ph["transfers"] += rep.transfers
         ph["bytes_moved"] += rep.bytes_moved
+        tel = self.telemetry
+        if tel.enabled:
+            for kind, n in (("cold", rep.cold_starts),
+                            ("warm", rep.warm_starts),
+                            ("prewarmed", rep.prewarmed)):
+                if n:
+                    tel.runtime_starts.labels(kind=kind).inc(n)
+            if rep.transfers:
+                tel.runtime_transfers.inc(rep.transfers)
+                tel.runtime_bytes.inc(rep.bytes_moved)
+                for rk, b in rep.rank_bytes.items():
+                    if b:
+                        tel.runtime_rank_bytes.labels(rank=rk).inc(b)
+            if rep.evictions:
+                tel.runtime_evictions.inc(rep.evictions)
+            if rep.overlap_eligible:
+                tel.runtime_overlap_copies.labels(kind="eligible").inc(
+                    rep.overlap_eligible)
+            if rep.exposed:
+                tel.runtime_overlap_copies.labels(kind="exposed").inc(
+                    rep.exposed)
+            hid = self.stats.overlap_hidden_s - hidden0
+            if hid:
+                tel.runtime_overlap_hidden.inc(hid)
+            tel.runtime_resident.set(self.resident_replicas())
+            tel.runtime_flush_seconds.observe(flush_wall)
+            if tel.tracing and rep.transfers:
+                # span anchored at the serving-clock apply time, with
+                # the flush's measured wall duration
+                tel.span(self.track, "bank_flush", t, t + flush_wall,
+                         args={"phase": phase,
+                               "transfers": rep.transfers,
+                               "bytes": rep.bytes_moved})
         return rep
 
     def _build_tables(self, layer: int, served) -> None:

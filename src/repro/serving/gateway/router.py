@@ -31,13 +31,19 @@ from __future__ import annotations
 
 import itertools
 import math
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable
 
+from repro.obs.telemetry import NOOP
 from repro.serving.gateway.driver import (Backpressure, EngineDriver,
                                           ReplicaMeters)
 from repro.serving.gateway.protocol import RequestError
 from repro.serving.scheduler import GenRequest
+
+# a long-lived gateway keeps only the newest scale decisions in the
+# /metrics.json payload; `events_total` stays the monotonic count
+SCALE_EVENT_RING = 64
 
 
 @dataclass(frozen=True)
@@ -73,7 +79,10 @@ class Autoscaler:
     def __init__(self, cfg: AutoscalerConfig, resident_gb: float):
         self.cfg = cfg
         self.resident_gb = resident_gb   # GB an idle replica keeps billing
-        self.events: list[ScaleEvent] = []
+        # bounded ring: the payload keeps the newest decisions; the
+        # monotonic total survives the ring's evictions
+        self.events: deque[ScaleEvent] = deque(maxlen=SCALE_EVENT_RING)
+        self.events_total = 0
         self._hot_streak = 0
         self._last_event_t = -math.inf
         self._last_t: float | None = None
@@ -114,6 +123,7 @@ class Autoscaler:
                 reason=f"queue delay {max_delay:.3g}s > "
                        f"{cfg.queue_delay_up_s:.3g}s for "
                        f"{self._hot_streak} observations"))
+            self.events_total += 1
             self._hot_streak = 0
             self._last_event_t = now
             return n + 1, None
@@ -128,6 +138,7 @@ class Autoscaler:
                     t=now, action="down", n_before=n, n_after=n - 1,
                     reason=f"replica {rid} idle-burned {burn:.3g} GB-s "
                            f">= {cfg.idle_gb_s_down:.3g} GB-s"))
+                self.events_total += 1
                 self._last_event_t = now
                 del self._idle_gb_s[rid]
                 return n - 1, rid
@@ -150,11 +161,12 @@ class Router:
 
     def __init__(self, factory: Callable[[int], EngineDriver], *,
                  scaler: AutoscalerConfig | None = None,
-                 threaded: bool = True):
+                 threaded: bool = True, telemetry=None):
         """`factory(replica_id)` builds one started session's driver
         (it must pass `replica_id` through to the ``EngineDriver``)."""
         self.factory = factory
         self.threaded = threaded
+        self.telemetry = NOOP if telemetry is None else telemetry
         self.scaler_cfg = scaler or AutoscalerConfig()
         self.replicas: dict[int, EngineDriver] = {}
         self.counters = RouterCounters()
@@ -248,18 +260,29 @@ class Router:
             if sink is not None:
                 driver.unsubscribe(req.rid)
             self.counters.rejected += 1
+            if self.telemetry.enabled:
+                self.telemetry.router_requests.labels(
+                    outcome="backpressure").inc()
             raise
         if handle.status == "rejected":
             if sink is not None:
                 driver.unsubscribe(req.rid)
+            if self.telemetry.enabled:
+                self.telemetry.router_requests.labels(
+                    outcome="rejected").inc()
             return driver, handle
         self.counters.admitted += 1
+        if self.telemetry.enabled:
+            self.telemetry.router_requests.labels(outcome="admitted").inc()
         return driver, handle
 
     def cancel(self, driver: EngineDriver, handle) -> bool:
         ok = driver.cancel(handle)
         if ok:
             self.counters.cancelled += 1
+            if self.telemetry.enabled:
+                self.telemetry.router_requests.labels(
+                    outcome="cancelled").inc()
         return ok
 
     # ---------------------------------------------------- autoscaling
@@ -274,7 +297,7 @@ class Router:
     def autoscale(self, now: float) -> list[ScaleEvent]:
         """One autoscaler observation; applies the decision (spawn or
         retire an idle replica). Returns the new events."""
-        n_events = len(self.scaler.events)
+        total0 = self.scaler.events_total
         meters = [d.meters() for d in self.replicas.values()]
         desired, retire_rid = self.scaler.observe(now, meters)
         n = len(self.live_replicas())
@@ -284,7 +307,20 @@ class Router:
         elif retire_rid is not None:
             self._retire(retire_rid)
             self.counters.scale_downs += 1
-        return self.scaler.events[n_events:]
+        # observe() appends at most one event per call, so the newest
+        # ring entry IS the new event whenever the total advanced
+        new = [self.scaler.events[-1]] \
+            if self.scaler.events_total > total0 else []
+        tel = self.telemetry
+        if tel.enabled:
+            for e in new:
+                tel.router_scale_events.labels(action=e.action).inc()
+                tel.instant("router", f"ScaleEvent:{e.action}", e.t,
+                            args={"n_before": e.n_before,
+                                  "n_after": e.n_after,
+                                  "reason": e.reason})
+            tel.router_replicas.set(len(self.live_replicas()))
+        return new
 
     # ----------------------------------------------- sync drive (bench)
 
@@ -319,9 +355,31 @@ class Router:
         for d in self.replicas.values():
             d.stop(join=self.threaded, close=True)
 
+    def refresh_telemetry(self) -> None:
+        """Snapshot per-replica meters into the registry's gauges —
+        called at scrape time (``GET /metrics``) so gauge values are
+        current without a per-step polling loop."""
+        tel = self.telemetry
+        if not tel.enabled:
+            return
+        tel.router_replicas.set(len(self.live_replicas()))
+        for d in sorted(self.replicas.values(), key=lambda d: d.replica_id):
+            m = d.meters()
+            rid = str(m.replica_id)
+            tel.replica_pending.labels(replica=rid).set(m.pending)
+            tel.replica_running.labels(replica=rid).set(m.running)
+            tel.replica_outstanding.labels(replica=rid).set(
+                m.outstanding_tokens)
+            tel.replica_queue_delay.labels(replica=rid).set(
+                m.queue_delay_s)
+            tel.replica_gb_seconds.labels(replica=rid).set(m.gb_s)
+            tel.replica_healthy.labels(replica=rid).set(
+                1 if m.healthy and not m.draining else 0)
+
     def metrics(self) -> dict:
-        """The `/metrics` payload: per-replica meters + router counters
-        + autoscale events."""
+        """The `/metrics.json` payload: per-replica meters + router
+        counters + the newest autoscale events (bounded ring; the
+        monotonic total rides along as ``scale_events_total``)."""
         reps = []
         completed = self._retired_completed
         cancelled = self._retired_cancelled
@@ -348,6 +406,7 @@ class Router:
                 "cancelled": cancelled, "completed": completed,
                 "scale_ups": c.scale_ups, "scale_downs": c.scale_downs,
                 "max_replicas_seen": c.max_replicas_seen,
+                "scale_events_total": self.scaler.events_total,
                 "scale_events": [
                     {"t": e.t, "action": e.action, "n_before": e.n_before,
                      "n_after": e.n_after, "reason": e.reason}

@@ -6,7 +6,10 @@ no new dependency — exposing:
   * ``POST /v1/completions``       OpenAI-style, token-id prompts
   * ``POST /v1/chat/completions``  token-id message contents
   * ``GET  /healthz``              liveness + per-replica health
-  * ``GET  /metrics``              router/replica meters + scale events
+  * ``GET  /metrics``              Prometheus text exposition (the
+    telemetry registry; replica gauges refreshed at scrape time)
+  * ``GET  /metrics.json``         router/replica meters + scale events
+    (the pre-telemetry JSON payload, unchanged shape)
 
 ``stream: true`` answers with SSE (``data: {...}`` frames, closed by
 ``data: [DONE]``), fed from the per-request asyncio queue the engine
@@ -144,14 +147,21 @@ class GatewayServer:
 
     async def _handle(self, reader: asyncio.StreamReader,
                       writer: asyncio.StreamWriter) -> None:
+        t0 = time.perf_counter()
+        route = "other"
         try:
             req = await _read_request(reader)
             if req is None:
                 return
             method, path, headers, body = req
+            if path in ("/healthz", "/metrics", "/metrics.json",
+                        "/v1/completions", "/v1/chat/completions"):
+                route = path   # bounded route label set
             if path == "/healthz" and method == "GET":
                 writer.write(_json_response(200, self._health()))
             elif path == "/metrics" and method == "GET":
+                writer.write(self._prometheus())
+            elif path == "/metrics.json" and method == "GET":
                 writer.write(_json_response(200, self.router.metrics()))
             elif path in ("/v1/completions", "/v1/chat/completions"):
                 if method != "POST":
@@ -174,6 +184,10 @@ class GatewayServer:
                 writer, RequestError(500, f"internal error: {e!r}",
                                      etype="server_error"))
         finally:
+            tel = self.router.telemetry
+            if tel.enabled:
+                tel.router_http_seconds.labels(route=route).observe(
+                    time.perf_counter() - t0)
             writer.close()
             try:
                 await writer.wait_closed()
@@ -190,6 +204,18 @@ class GatewayServer:
             await writer.drain()
         except (ConnectionError, OSError):
             pass
+
+    def _prometheus(self) -> bytes:
+        """Render the telemetry registry as text exposition 0.0.4,
+        refreshing the per-replica gauges first. With telemetry
+        disabled, serves an empty (but valid) exposition."""
+        self.router.refresh_telemetry()
+        registry = self.router.telemetry.registry
+        text = registry.render_prometheus() if registry is not None \
+            else "# telemetry disabled\n"
+        return _response(
+            200, text.encode(),
+            content_type="text/plain; version=0.0.4; charset=utf-8")
 
     def _health(self) -> dict:
         live = self.router.live_replicas()

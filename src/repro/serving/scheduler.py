@@ -129,21 +129,24 @@ class RequestMetrics:
 
 
 def percentile_summary(records: list[RequestMetrics]) -> dict:
-    """{metric: {mean, p50, p95, p99}} over finished requests.
+    """{metric: {count, mean, p50, p95, p99}} over finished requests.
 
     TPOT is a per-*subsequent*-token latency, undefined for single-token
     requests — those are excluded from the TPOT statistics (they would
     enter as 0.0 and drag the mean/p50 down) but still count toward
-    TTFT and E2E."""
+    TTFT and E2E. Empty record sets yield all-zero entries (with
+    ``count`` 0) so callers can always read every key."""
     out = {}
     for m in ("ttft", "tpot", "e2e"):
         rs = records if m != "tpot" else \
             [r for r in records if r.out_tokens > 1]
         xs = np.asarray([getattr(r, m) for r in rs], np.float64)
         if xs.size == 0:
-            out[m] = {"mean": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0}
+            out[m] = {"count": 0, "mean": 0.0,
+                      "p50": 0.0, "p95": 0.0, "p99": 0.0}
         else:
-            out[m] = {"mean": float(xs.mean()),
+            out[m] = {"count": int(xs.size),
+                      "mean": float(xs.mean()),
                       "p50": float(np.percentile(xs, 50)),
                       "p95": float(np.percentile(xs, 95)),
                       "p99": float(np.percentile(xs, 99))}

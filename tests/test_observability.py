@@ -1,0 +1,425 @@
+"""Telemetry layer: metrics registry semantics, Prometheus text
+exposition (golden file), Chrome trace-event tracing, NOOP overhead
+contract, and the instrumented serving scenario end-to-end."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.obs import (NOOP, MetricsRegistry, NullTelemetry, Telemetry,
+                       Tracer)
+from repro.obs.registry import TIME_BUCKETS
+
+GOLDEN = __file__.rsplit("/", 1)[0] + "/goldens/metrics_exposition.txt"
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_counter_semantics():
+    r = MetricsRegistry()
+    c = r.counter("c_total", "help")
+    c.inc()
+    c.inc(2.5)
+    assert r.as_dict()["c_total"] == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_semantics():
+    r = MetricsRegistry()
+    g = r.gauge("g", "help")
+    g.set(4.0)
+    g.inc()
+    assert r.as_dict()["g"] == 5.0
+    g.labels().dec(2.0)
+    assert r.as_dict()["g"] == 3.0
+
+
+def test_histogram_buckets_cumulative():
+    r = MetricsRegistry()
+    h = r.histogram("h_seconds", "help", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 2.0):
+        h.observe(v)
+    d = r.as_dict()
+    assert d['h_seconds_bucket{le="0.1"}'] == 1      # cumulative
+    assert d['h_seconds_bucket{le="1"}'] == 2
+    assert d['h_seconds_bucket{le="+Inf"}'] == 3
+    assert d["h_seconds_count"] == 3
+    assert d["h_seconds_sum"] == pytest.approx(2.55)
+
+
+def test_labeled_families_and_schema_enforcement():
+    r = MetricsRegistry()
+    c = r.counter("req_total", "help", labels=("outcome",))
+    c.labels(outcome="ok").inc(2)
+    c.labels(outcome="err").inc()
+    d = r.as_dict()
+    assert d['req_total{outcome="ok"}'] == 2
+    assert d['req_total{outcome="err"}'] == 1
+    with pytest.raises(ValueError):                  # wrong label name
+        c.labels(reason="ok")
+    with pytest.raises(ValueError):                  # label-less access
+        c.inc()
+
+
+def test_label_cardinality_cap():
+    r = MetricsRegistry()
+    c = r.counter("c_total", "", labels=("rid",), max_series=8)
+    for i in range(8):
+        c.labels(rid=i).inc()
+    with pytest.raises(ValueError, match="cardinality"):
+        c.labels(rid=999).inc()
+    # existing series stay usable after the cap fires
+    c.labels(rid=0).inc()
+
+
+def test_reregistration():
+    r = MetricsRegistry()
+    a = r.counter("x_total", "", labels=("k",))
+    assert r.counter("x_total", "", labels=("k",)) is a   # idempotent
+    with pytest.raises(ValueError, match="re-registered"):
+        r.gauge("x_total")                                # kind mismatch
+    with pytest.raises(ValueError, match="re-registered"):
+        r.counter("x_total", "", labels=("other",))       # label mismatch
+
+
+def test_prometheus_exposition_golden_file():
+    """The exposition is byte-stable for a fixed recording sequence —
+    the contract the gateway-smoke parser and dashboards rely on."""
+    r = MetricsRegistry()
+    c = r.counter("demo_requests_total", "requests served",
+                  labels=("outcome",))
+    c.labels(outcome="ok").inc(3)
+    c.labels(outcome="error").inc()
+    r.gauge("demo_queue_depth", "requests waiting").set(2)
+    h = r.histogram("demo_latency_seconds", "request latency",
+                    buckets=(0.1, 1.0))
+    for v in (0.0625, 0.5, 2.0):                  # dyadic: exact sums
+        h.observe(v)
+    with open(GOLDEN) as f:
+        assert r.render_prometheus() == f.read()
+
+
+def test_exposition_escaping_and_inf():
+    r = MetricsRegistry()
+    r.counter("c_total", "", labels=("v",)).labels(v='a"b\\c\nd').inc()
+    r.gauge("g").set(math.inf)
+    text = r.render_prometheus()
+    assert 'c_total{v="a\\"b\\\\c\\nd"} 1' in text
+    assert "g +Inf" in text
+
+
+def test_as_dict_matches_exposition_values():
+    tel = Telemetry()
+    tel.sched_admitted.inc(5)
+    tel.engine_step_seconds.labels(phase="decode").observe(0.25)
+    d = tel.registry.as_dict()
+    assert d["scheduler_admitted_total"] == 5
+    assert d['engine_step_seconds_count{phase="decode"}'] == 1
+    for line in tel.registry.render_prometheus().splitlines():
+        if line.startswith("#") or not line:
+            continue
+        series, value = line.rsplit(" ", 1)
+        assert d[series] == pytest.approx(
+            float(value.replace("+Inf", "inf")))
+
+
+# ------------------------------------------------------------------ tracer
+
+
+def test_tracer_roundtrip(tmp_path):
+    tr = Tracer(process_name="test-proc")
+    tr.span("engine", "decode_step", 0.0, 0.5, args={"occupancy": 3})
+    tr.span("engine/req0", "queue", 0.0, 0.1)
+    tr.span("engine/req0", "prefill", 0.1, 0.2)
+    tr.instant("engine/req0", "finish", 0.7)
+    tr.counter("engine", "tokens", 0.5, generated=12)
+    path = tmp_path / "trace.json"
+    n = tr.write(str(path))
+    obj = json.loads(path.read_text())               # valid JSON
+    assert len(obj["traceEvents"]) == n
+    evs = obj["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    names = {e["args"]["name"] for e in meta}
+    assert {"test-proc", "engine", "engine/req0"} <= names
+    # one stable tid per track; ts in microseconds
+    by_name = {e["name"]: e for e in evs if e["ph"] != "M"}
+    assert by_name["queue"]["tid"] == by_name["finish"]["tid"]
+    assert by_name["queue"]["tid"] != by_name["decode_step"]["tid"]
+    assert by_name["decode_step"]["dur"] == pytest.approx(0.5e6)
+    assert by_name["finish"]["ts"] == pytest.approx(0.7e6)
+
+
+def _assert_monotonic_per_track(obj):
+    last: dict[int, float] = {}
+    for e in obj["traceEvents"]:
+        if e["ph"] == "M":
+            continue
+        assert e["ts"] >= last.get(e["tid"], -math.inf), e
+        last[e["tid"]] = e["ts"]
+
+
+def test_tracer_negative_duration_clamped():
+    tr = Tracer()
+    tr.span("t", "s", 1.0, 0.5)          # caller bug: t1 < t0
+    ev = tr.to_obj()["traceEvents"][-1]
+    assert ev["dur"] == 0.0
+
+
+# ----------------------------------------------------------- NOOP contract
+
+
+def test_noop_telemetry_swallows_everything():
+    assert NOOP.enabled is False and NOOP.tracing is False
+    assert NOOP.registry is None and NOOP.tracer is None
+    NOOP.sched_admitted.inc()
+    NOOP.anything.labels(a=1, b=2).observe(3.0)      # any chain no-ops
+    NOOP.span("t", "s", 0.0, 1.0)
+    NOOP.instant("t", "i", 0.0)
+    assert isinstance(NOOP, NullTelemetry)
+
+
+def test_telemetry_taxonomy_registers_cleanly():
+    tel = Telemetry()
+    assert tel.enabled and not tel.tracing
+    text = tel.registry.render_prometheus()
+    for fam in ("scheduler_admitted_total", "engine_steps_total",
+                "runtime_replica_starts_total", "control_iterations_total",
+                "router_requests_total"):
+        assert f"# TYPE {fam} counter" in text
+    assert "# TYPE engine_step_seconds histogram" in text
+    # two handles share one registry without re-registration conflicts
+    Telemetry(registry=tel.registry)
+
+
+# ----------------------------------------------------- percentile_summary
+
+
+def test_percentile_summary_count_and_mean():
+    from repro.serving.scheduler import RequestMetrics, percentile_summary
+    rs = [RequestMetrics(rid=i, arrival=0.0, in_tokens=8, out_tokens=4,
+                         ttft=0.1 * (i + 1), tpot=0.05,
+                         e2e=1.0 * (i + 1)) for i in range(4)]
+    s = percentile_summary(rs)
+    assert s["e2e"]["count"] == 4
+    assert s["e2e"]["mean"] == pytest.approx(np.mean([1.0, 2.0, 3.0, 4.0]))
+    assert s["ttft"]["count"] == 4
+    empty = percentile_summary([])
+    for m in ("ttft", "tpot", "e2e"):
+        assert empty[m] == {"count": 0, "mean": 0.0, "p50": 0.0,
+                            "p95": 0.0, "p99": 0.0}
+    # single-token requests are excluded from TPOT but counted elsewhere
+    one = percentile_summary([RequestMetrics(
+        rid=0, arrival=0.0, in_tokens=8, out_tokens=1, ttft=0.1,
+        tpot=0.0, e2e=0.1)])
+    assert one["tpot"]["count"] == 0 and one["e2e"]["count"] == 1
+
+
+# ------------------------------------------------------- scale-event ring
+
+
+def test_autoscaler_ring_bounded_total_monotonic():
+    from repro.serving.gateway.driver import ReplicaMeters
+    from repro.serving.gateway.router import (SCALE_EVENT_RING,
+                                              Autoscaler, AutoscalerConfig)
+
+    sc = Autoscaler(AutoscalerConfig(
+        min_replicas=1, max_replicas=1000, queue_delay_up_s=1e-9,
+        sustain=1, cooldown_s=0.0), resident_gb=1.0)
+
+    def hot(n, t):
+        return [ReplicaMeters(
+            replica_id=i, healthy=True, draining=False, pending=2,
+            running=1, free_slots=0, outstanding_tokens=8,
+            queue_delay_s=9.0, completed=0, cancelled=0, clock_s=t,
+            gb_s=0.0, idle=False) for i in range(n)]
+
+    n = 1
+    for k in range(100):                 # 100 up decisions > ring size
+        want, _ = sc.observe(float(k), hot(n, float(k)))
+        assert want == n + 1
+        n = want
+    assert sc.events_total == 100
+    assert len(sc.events) == SCALE_EVENT_RING
+    # the ring keeps the NEWEST events
+    assert sc.events[-1].t == 99.0
+    assert sc.events[0].t == float(100 - SCALE_EVENT_RING)
+
+
+# ------------------------------------------- control-plane L1 error gauge
+
+
+class _FixedErrorModel:
+    """Stub PredictorErrorModel: prediction = actual + known offset."""
+
+    def __init__(self, offset):
+        self.offset = np.asarray(offset, np.float64)
+
+    def predict(self, rng, actual, layer, distance):
+        return np.asarray(actual, np.float64) + self.offset
+
+
+def test_control_plane_l1_error_hand_computed():
+    from repro.configs import get_config
+    from repro.core.control import ControlPlane
+
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    E = cfg.moe.num_experts
+    offset = np.arange(E, dtype=np.float64)          # |pred-act| = offset
+    tel = Telemetry()
+    cp = ControlPlane(cfg, "megatron-lm", num_devices=4,
+                      error_model=_FixedErrorModel(offset), telemetry=tel,
+                      straggler_factor=1.5)
+    acts = np.tile(np.linspace(4.0, 8.0, E), (cp.n_layers, 1))
+    cp.step(0.0, None, acts, phase="decode")
+    d = tel.registry.as_dict()
+    for l in range(cp.n_layers):
+        assert d[f'control_pred_load_l1_error{{layer="{l}"}}'] == \
+            pytest.approx(float(offset.sum()))
+        assert d[f'control_load_max{{layer="{l}"}}'] == pytest.approx(8.0)
+        assert d[f'control_load_mean{{layer="{l}"}}'] == \
+            pytest.approx(6.0)
+        assert d[f'control_imbalance_factor{{layer="{l}"}}'] == \
+            pytest.approx(8.0 / 6.0)
+    assert d['control_iterations_total{phase="decode"}'] == 1
+    assert d["control_layer_latency_seconds_count"] == cp.n_layers
+    assert "control_stragglers_total" not in d       # 8/6 < 1.5
+
+
+def test_control_plane_straggler_flagged():
+    from repro.configs import get_config
+    from repro.core.control import ControlPlane
+
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    E = cfg.moe.num_experts
+    tel = Telemetry(tracer=Tracer())
+    cp = ControlPlane(cfg, "megatron-lm", num_devices=4,
+                      error_model=_FixedErrorModel(np.zeros(E)),
+                      telemetry=tel, straggler_factor=2.0,
+                      track="lane/control")
+    acts = np.ones((cp.n_layers, E))
+    acts[:, 0] = 100.0                               # one hot expert
+    cp.step(1.0, None, acts)
+    d = tel.registry.as_dict()
+    assert d["control_stragglers_total"] == cp.n_layers
+    evs = tel.tracer.to_obj()["traceEvents"]
+    stragglers = [e for e in evs if e["name"] == "straggler"]
+    assert len(stragglers) == cp.n_layers
+    assert stragglers[0]["ph"] == "i"
+    assert stragglers[0]["args"]["layer"] == 0
+
+
+# --------------------------------------- instrumented serving end-to-end
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import model as M
+
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _mk_reqs(cfg, n, gen=4, prompt_len=8):
+    from repro.serving.scheduler import GenRequest
+    rng = np.random.default_rng(0)
+    return [GenRequest(
+        rid=i, arrival=float("nan"),
+        prompt=rng.integers(0, cfg.vocab_size, size=prompt_len,
+                            dtype=np.int32),
+        max_new_tokens=gen) for i in range(n)]
+
+
+def test_instrumented_serve_identical_to_noop(smoke_model):
+    """Telemetry is observation-only: request metrics on the MODELED
+    serving clock from an instrumented serve match the NOOP default
+    bit-for-bit (the control plane pins the clock to modeled latency;
+    without one the clock advances by non-deterministic wall time)."""
+    from repro.core.control import ControlPlane
+    from repro.serving.engine import ServingEngine
+
+    cfg, params = smoke_model
+
+    def run(tel):
+        eng = ServingEngine(cfg, params, max_len=16, telemetry=tel)
+        reqs = _mk_reqs(cfg, 3)
+        for r in reqs:
+            r.arrival = 0.0
+        res = eng.serve(reqs, num_slots=2,
+                        control=ControlPlane(cfg, "megatron-lm",
+                                             num_devices=4,
+                                             telemetry=tel))
+        return [(r.rid, r.out_tokens, r.ttft, r.e2e)
+                for r in res.records]
+
+    assert run(None) == run(Telemetry(tracer=Tracer()))
+
+
+def test_gateway_scenario_trace_and_metrics(smoke_model, tmp_path):
+    """One unthreaded router scenario produces the full observable
+    surface: queue/prefill/decode spans + finish instants per request,
+    a ScaleEvent instant, populated registry families, and a trace that
+    round-trips through JSON with per-track monotonic timestamps."""
+    from repro.serving.engine import ServingEngine
+    from repro.serving.gateway import (AutoscalerConfig, Backpressure,
+                                       EngineDriver, Router)
+
+    cfg, params = smoke_model
+    tracer = Tracer(process_name="test-gateway")
+    tel = Telemetry(tracer=tracer)
+
+    def factory(i):
+        eng = ServingEngine(cfg, params, max_len=16, telemetry=tel,
+                            name=f"replica{i}")
+        return EngineDriver(eng, replica_id=i, num_slots=1, max_pending=2)
+
+    router = Router(factory, threaded=False, telemetry=tel,
+                    scaler=AutoscalerConfig(
+                        min_replicas=1, max_replicas=2,
+                        queue_delay_up_s=1e-9, sustain=1, cooldown_s=0.0))
+    scale_events = []
+    for req in _mk_reqs(cfg, 5):
+        try:
+            router.submit(req)
+        except Backpressure:
+            pass
+        router.step_all()
+        scale_events += router.autoscale(router.clock())
+    for _ in range(10_000):
+        if not any(d.engine.has_work for d in router.replicas.values()
+                   if d.healthy):
+            break
+        router.step_all()
+        scale_events += router.autoscale(router.clock())
+    router.refresh_telemetry()
+    d = tel.registry.as_dict()
+    router.stop()
+
+    assert any(e.action == "up" for e in scale_events)
+    assert d['router_scale_events_total{action="up"}'] >= 1
+    assert d["router_replicas"] == 2
+    assert d["scheduler_admitted_total"] >= 2
+    assert d['engine_steps_total{phase="decode"}'] >= 1
+    assert d["scheduler_queue_delay_seconds_count"] == \
+        d["scheduler_admitted_total"]
+    assert d['replica_healthy{replica="0"}'] == 1
+
+    path = tmp_path / "gw.json"
+    tracer.write(str(path))
+    obj = json.loads(path.read_text())
+    _assert_monotonic_per_track(obj)
+    names = [e["name"] for e in obj["traceEvents"] if e["ph"] != "M"]
+    for want in ("queue", "prefill", "decode", "decode_step", "finish"):
+        assert want in names, (want, sorted(set(names)))
+    scale = [e for e in obj["traceEvents"]
+             if e["name"].startswith("ScaleEvent:")]
+    assert scale and scale[0]["ph"] == "i"
+    assert scale[0]["args"]["n_after"] == 2
+    # every admitted request got its own queue->prefill->decode->finish
+    finishes = [e for e in obj["traceEvents"] if e["name"] == "finish"]
+    assert len(finishes) == d["scheduler_admitted_total"]
