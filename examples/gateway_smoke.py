@@ -1,13 +1,20 @@
 """End-to-end gateway smoke: boot ``launch/serve.py --gateway`` as a
-subprocess (expert runtime ON, so every telemetry subsystem is live),
-hit it over real HTTP, and assert
+subprocess (expert runtime ON, so every telemetry subsystem is live;
+paged KV + chunked prefill + radix prefix cache ON, capacity factor
+pinned to num_experts so routing is drop-free), hit it over real HTTP,
+and assert
 
   * the tokens are bit-identical to an offline ``engine.serve()`` run
-    with the same config/seed/prompt (and no expert runtime — the
-    greedy EP-vs-dispatch equivalence rides along for free);
+    with the same seed/prompt on the CONTIGUOUS KV layout (and no
+    expert runtime) — so the greedy EP-vs-dispatch equivalence AND the
+    paged-vs-contiguous bit-identity contract both ride over HTTP;
+  * the second, identical request warms the radix prefix cache:
+    ``kv_prefix_hits_total >= 1`` and ``kv_prefix_tokens_saved_total
+    > 0`` in the exposition, with the tokens still unchanged;
   * ``GET /metrics`` is valid Prometheus text exposition (every line
     parses) containing counter+gauge+histogram families from each of
-    scheduler / engine / expert runtime / control plane / router;
+    scheduler / engine / expert runtime / control plane / router,
+    plus the paged-KV gauges/counters;
   * ``GET /metrics.json`` still serves the JSON meters payload.
 
 Run from the repo root (CI does):
@@ -36,11 +43,22 @@ GEN = 6
 SLOTS = 2
 MAX_LEN = len(PROMPT) + GEN + 1
 BOOT_TIMEOUT_S = 300
+# Paged-KV knobs for the gateway side. Bit-identity vs the contiguous
+# offline engine requires drop-free routing, so the capacity factor is
+# pinned to the smoke config's num_experts on BOTH sides.
+KV_BLOCK = 5
+PREFILL_CHUNK = 3
+CAPACITY_FACTOR = 4.0
 
 
 def offline_tokens() -> list[int]:
     """Greedy continuation from a plain in-process engine — the ground
-    truth the gateway must reproduce bit-for-bit."""
+    truth the gateway must reproduce bit-for-bit.  Deliberately stays
+    on the CONTIGUOUS KV layout while the gateway serves from the
+    paged pool: matching tokens over HTTP exercises the
+    paged-vs-contiguous identity contract end to end."""
+    import dataclasses
+
     import jax
     import numpy as np
 
@@ -50,6 +68,10 @@ def offline_tokens() -> list[int]:
     from repro.serving.scheduler import GenRequest, SamplingParams
 
     cfg = get_config(ARCH, smoke=True)
+    assert float(cfg.moe.num_experts) == CAPACITY_FACTOR, \
+        "drop-free pin out of date vs smoke config"
+    cfg = cfg.with_(moe=dataclasses.replace(
+        cfg.moe, capacity_factor=CAPACITY_FACTOR))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     eng = ServingEngine(cfg, params, max_len=MAX_LEN)
     req = GenRequest(rid=0, arrival=0.0,
@@ -72,7 +94,10 @@ def boot_gateway() -> tuple[subprocess.Popen, int]:
         [sys.executable, "-m", "repro.launch.serve", "--gateway",
          "--port", "0", "--replicas", "1", "--slots", str(SLOTS),
          "--prompt-len", str(len(PROMPT)), "--gen", str(GEN),
-         "--arch", ARCH, "--seed", "0", "--expert-runtime", "on"],
+         "--arch", ARCH, "--seed", "0", "--expert-runtime", "on",
+         "--kv-block", str(KV_BLOCK),
+         "--prefill-chunk", str(PREFILL_CHUNK), "--prefix-cache",
+         "--capacity-factor", str(CAPACITY_FACTOR)],
         env=env, cwd=ROOT, stdout=subprocess.PIPE,
         stderr=subprocess.STDOUT, text=True)
     deadline = time.monotonic() + BOOT_TIMEOUT_S
@@ -168,6 +193,17 @@ def check_exposition(text: str) -> None:
     starts = sum(v for k, v in samples.items()
                  if k.startswith("runtime_replica_starts_total{"))
     assert starts > 0, "expert runtime recorded no replica starts"
+    # paged-KV pool + radix prefix cache: the second (identical)
+    # request must have resumed from the cached prompt chain
+    assert types.get("kv_blocks_used") == "gauge", types.get("kv_blocks_used")
+    assert types.get("kv_blocks_free") == "gauge", types.get("kv_blocks_free")
+    assert types.get("kv_prefix_hits_total") == "counter"
+    assert samples["kv_prefix_hits_total"] >= 1, \
+        "warm second request did not hit the prefix cache"
+    assert samples["kv_prefix_tokens_saved_total"] > 0, samples
+    # both requests released their slots before this scrape, so every
+    # non-cached block is back on the free list
+    assert samples["kv_blocks_free"] > 0, samples
 
 
 def sse_tokens(raw: bytes) -> tuple[list[int], str | None]:
@@ -219,7 +255,7 @@ def main() -> None:
         assert st == 200, (st, raw[:200])
         check_exposition(raw.decode())
         print(f"/metrics exposition OK ({len(raw.splitlines())} lines, "
-              f"all 5 subsystems present)")
+              f"all 5 subsystems present, prefix cache warm)")
 
         st, raw = request(port, "GET", "/metrics.json")
         m = json.loads(raw)["router"]
@@ -233,7 +269,8 @@ def main() -> None:
             proc.wait(timeout=10)
         except subprocess.TimeoutExpired:
             proc.kill()
-    print("gateway smoke PASS: HTTP tokens == offline engine.serve()")
+    print("gateway smoke PASS: paged/chunked/prefix HTTP tokens == "
+          "contiguous offline engine")
 
 
 if __name__ == "__main__":

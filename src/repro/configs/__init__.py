@@ -1,9 +1,9 @@
 from repro.configs.base import (
-    INPUT_SHAPES, EncDecSpec, InputShape, ModelConfig, MoESpec, SSMSpec,
+    INPUT_SHAPES, EncDecSpec, InputShape, ModelConfig, MoESpec, SSMSpec, ServingSpec,
     get_config, get_input_shape, list_archs, register,
 )
 
 __all__ = [
     "INPUT_SHAPES", "EncDecSpec", "InputShape", "ModelConfig", "MoESpec",
-    "SSMSpec", "get_config", "get_input_shape", "list_archs", "register",
+    "SSMSpec", "ServingSpec", "get_config", "get_input_shape", "list_archs", "register",
 ]

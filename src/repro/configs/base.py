@@ -40,6 +40,30 @@ class MoESpec:
 
 
 @dataclass(frozen=True)
+class ServingSpec:
+    """Serving-layer KV management knobs (``repro.serving.kv`` /
+    ``repro.serving.engine``).
+
+    kv="paged" replaces the per-slot contiguous KV rows with a global
+    pool of fixed-size blocks (``kv_block`` tokens each) addressed by
+    per-slot block tables — the unit of sharing, copy-on-write, and
+    eviction. ``prefill_chunk`` > 0 (paged only) folds prompt prefill
+    into the batched decode step, ``prefill_chunk`` tokens per request
+    per iteration, instead of a solo B=1 prefill that stalls the whole
+    decode batch. ``prefix_cache`` (paged + chunked only) keeps a radix
+    cache of prompt-prefix block chains so a shared system prompt is
+    refcount-shared instead of re-prefilled."""
+    kv: str = "contiguous"         # "contiguous" | "paged"
+    kv_block: int = 16             # tokens per KV block (paged)
+    kv_blocks: int = 0             # pool size in blocks (0 = auto:
+    #                                1 trash + num_slots * blocks/slot)
+    prefill_chunk: int = 0         # >0: chunked prefill inside the
+    #                                batched step (paged only)
+    prefix_cache: bool = False     # radix shared-prefix cache (paged +
+    #                                chunked only)
+
+
+@dataclass(frozen=True)
 class SSMSpec:
     """Mamba / xLSTM recurrent sublayer spec."""
     kind: str = "mamba"            # "mamba" | "xlstm"
@@ -71,6 +95,7 @@ class ModelConfig:
     moe: Optional[MoESpec] = None
     ssm: Optional[SSMSpec] = None
     encdec: Optional[EncDecSpec] = None
+    serving: ServingSpec = ServingSpec()
     # attention flavour
     qk_norm: bool = False
     qkv_bias: bool = False

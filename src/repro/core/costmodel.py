@@ -133,6 +133,21 @@ def iteration_cost(forward_time: float, resident_bytes: float,
     return forward_time * (resident_bytes / 1e9) * hw.price_per_gb_s
 
 
+def kv_bytes_per_block(cfg, block: int) -> int:
+    """Bytes ONE paged-KV pool block occupies across the whole cache
+    tree: every attention sublayer stores k + v ``(block, kv_heads,
+    head_dim)`` tiles in the model dtype plus an int32 position lane.
+    Must equal ``serving.kv.PagedKVCache.block_bytes`` exactly — the
+    tests cross-check the analytic form against the live pytree."""
+    from repro.models.transformer import layer_pattern
+    pattern = layer_pattern(cfg)
+    periods = cfg.num_layers // len(pattern)
+    n_attn = periods * sum(s.mixer == "attn" for s in pattern)
+    itemsize = _DTYPE_BYTES.get(cfg.dtype, 2)
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return n_attn * block * (2 * kvh * hd * itemsize + 4)
+
+
 def misc_memory_bytes(cfg) -> float:
     """M_misc — non-expert memory (attention + router + KV, rough per
     model), billed identically for every strategy."""

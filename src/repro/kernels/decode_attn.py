@@ -113,6 +113,79 @@ def decode_attention(q, k, v, kv_pos, kv_len, q_pos, *, window: int = 0,
     )(scalars, q, k, v, kv_pos)
 
 
+def _paged_kernel(tab_ref, scalar_ref, q_ref, k_ref, v_ref, pos_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, ns: int, window: int):
+    # the block tables are consumed entirely by the BlockSpec index maps
+    # (they pick WHICH pool block streams in at each grid step); inside
+    # the body the recurrence is the contiguous kernel's, with the block
+    # axis as the innermost "arbitrary" grid dim
+    del tab_ref
+    _kernel(scalar_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+            m_ref, l_ref, acc_ref, ns=ns, window=window)
+
+
+def decode_attention_paged(q, k, v, kv_pos, block_tables, kv_len, q_pos, *,
+                           window: int = 0, interpret: bool = False):
+    """Paged-pool flash decode: q (B, H, hd); k/v are the GLOBAL block
+    pool (NB, blk, KV, hd) with kv_pos (NB, blk); block_tables (B, nbs)
+    int32 maps each row's logical block i to a pool block id. The tables
+    ride the scalar-prefetch lane so the K/V BlockSpec index maps can
+    gather pool blocks directly — no (B, nbs*blk) materialisation.
+    kv_len/q_pos: (B,). Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    blk, kv = k.shape[1], k.shape[2]
+    nbs = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    q = (q * scale).astype(q.dtype)
+    tables = jnp.asarray(block_tables, jnp.int32)
+    scalars = jnp.stack([jnp.broadcast_to(kv_len, (b,)).astype(jnp.int32),
+                         jnp.broadcast_to(q_pos, (b,)).astype(jnp.int32)],
+                        axis=1)
+    kernel = functools.partial(_paged_kernel, ns=nbs, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, h, nbs),
+            in_specs=[
+                pl.BlockSpec((None, None, hd),
+                             lambda b, hh, si, tab, sc: (b, hh, 0)),
+                pl.BlockSpec((None, blk, None, hd),
+                             lambda b, hh, si, tab, sc:
+                             (tab[b, si], 0, hh // (h // kv), 0)),
+                pl.BlockSpec((None, blk, None, hd),
+                             lambda b, hh, si, tab, sc:
+                             (tab[b, si], 0, hh // (h // kv), 0)),
+                pl.BlockSpec((None, blk),
+                             lambda b, hh, si, tab, sc: (tab[b, si], 0)),
+            ],
+            out_specs=pl.BlockSpec((None, None, hd),
+                                   lambda b, hh, si, tab, sc: (b, hh, 0)),
+            scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32),
+                            pltpu.VMEM((1, 1), jnp.float32),
+                            pltpu.VMEM((1, hd), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, scalars, q, k, v, kv_pos)
+
+
+def decode_attention_paged_ref(q, k, v, kv_pos, block_tables, kv_len,
+                               q_pos, *, window: int = 0):
+    """Pure-jnp oracle for the paged kernel: gather each row's block
+    chain from the pool, then run the contiguous oracle."""
+    b = q.shape[0]
+    blk, kv, hd = k.shape[1], k.shape[2], k.shape[3]
+    nbs = block_tables.shape[1]
+    gk = k[block_tables].reshape(b, nbs * blk, kv, hd)
+    gv = v[block_tables].reshape(b, nbs * blk, kv, hd)
+    gpos = kv_pos[block_tables].reshape(b, nbs * blk)
+    return decode_attention_ref(q, gk, gv, gpos, kv_len, q_pos,
+                                window=window)
+
+
 def decode_attention_ref(q, k, v, kv_pos, kv_len, q_pos, *,
                          window: int = 0):
     """Pure-jnp oracle (mirrors models.layers.attention semantics)."""

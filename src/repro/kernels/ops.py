@@ -96,6 +96,22 @@ def decode_attention_impl(q, k, v, kv_pos, kv_len, q_pos, *, window: int,
         interpret=(impl == "pallas_interpret"))
 
 
+def decode_attention_paged_impl(q, k, v, kv_pos, block_tables, kv_len,
+                                q_pos, *, window: int, impl: str):
+    """Un-jitted core of ``decode_attention_paged``: decode attention
+    against the paged GLOBAL block pool via per-row block tables."""
+    impl = resolve_impl(impl)
+    b = q.shape[0]
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+    q_pos = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32), (b,))
+    if impl == "ref":
+        return decode_attn.decode_attention_paged_ref(
+            q, k, v, kv_pos, block_tables, kv_len, q_pos, window=window)
+    return decode_attn.decode_attention_paged(
+        q, k, v, kv_pos, block_tables, kv_len, q_pos, window=window,
+        interpret=(impl == "pallas_interpret"))
+
+
 @partial(jax.jit, static_argnames=("impl",))
 def expert_ffn(x, w_gate, w_up, w_down, group_sizes, *, impl: str = "auto"):
     """Capacity-layout SwiGLU expert FFN: (E, C, D) -> (E, C, D).
@@ -139,3 +155,17 @@ def decode_attention(q, k, v, kv_pos, kv_len, q_pos, *, window: int = 0,
     """
     return decode_attention_impl(q, k, v, kv_pos, kv_len, q_pos,
                                  window=window, impl=impl)
+
+
+@partial(jax.jit, static_argnames=("window", "impl"))
+def decode_attention_paged(q, k, v, kv_pos, block_tables, kv_len, q_pos,
+                           *, window: int = 0, impl: str = "auto"):
+    """Single-token decode attention against a paged KV block pool.
+
+    q: (B, H, hd); k/v: pool (NB, blk, KV, hd); kv_pos: (NB, blk);
+    block_tables: (B, nbs) int32; kv_len/q_pos: (B,) or scalar.
+    Returns (B, H, hd).
+    """
+    return decode_attention_paged_impl(q, k, v, kv_pos, block_tables,
+                                       kv_len, q_pos, window=window,
+                                       impl=impl)

@@ -121,6 +121,20 @@ def main(argv=None):
     ap.add_argument("--expert-runtime", default="off",
                     choices=("off", "on"),
                     help="execute replica plans on the EP slot data plane")
+    ap.add_argument("--kv-block", type=int, default=0,
+                    help="paged-KV block size in tokens (0 = contiguous "
+                         "per-slot KV layout)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="fold prompt prefill into the batched decode "
+                         "step, <= N prompt tokens per request per "
+                         "iteration (0 = solo prefill; needs --kv-block)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prompt-prefix sharing over the paged "
+                         "pool (needs --prefill-chunk)")
+    ap.add_argument("--capacity-factor", type=float, default=0.0,
+                    help="override the MoE capacity factor (0 = arch "
+                         "default; set to num_experts for drop-free, "
+                         "bit-reproducible serving)")
     ap.add_argument("--slot-dtype", default="fp32", choices=SLOT_DTYPES,
                     help="expert slot-bank storage format: 'int8' "
                          "quantizes the banks (kernels.quant) so cold "
@@ -172,6 +186,21 @@ def main(argv=None):
     from repro.serving.scheduler import GenRequest, SamplingParams
 
     cfg = get_config(args.arch, smoke=True)
+    if args.prefill_chunk and not args.kv_block:
+        raise SystemExit("--prefill-chunk needs --kv-block (chunked "
+                         "prefill runs over the paged pool)")
+    if args.prefix_cache and not args.prefill_chunk:
+        raise SystemExit("--prefix-cache needs --prefill-chunk (partial "
+                         "prefix hits resume mid-prompt)")
+    if args.kv_block:
+        from repro.configs import ServingSpec
+        cfg = cfg.with_(serving=ServingSpec(
+            kv="paged", kv_block=args.kv_block,
+            prefill_chunk=args.prefill_chunk,
+            prefix_cache=args.prefix_cache))
+    if args.capacity_factor > 0 and cfg.is_moe:
+        cfg = cfg.with_(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=args.capacity_factor))
     if cfg.is_moe:
         # cfg-level rewrite BEFORE the controller/engine exist, so the
         # control plane's cost coefficients and the runtime's slot banks

@@ -198,7 +198,8 @@ def init_attention(key, cfg, dtype):
 
 
 def attention_block(p, cfg, x, positions, *, cache=None, cache_len=None,
-                    window: int = 0, impl: str = "ref"):
+                    window: int = 0, impl: str = "ref",
+                    block_tables=None, new_counts=None):
     """Full attention sublayer: qkv proj -> rope -> attention -> out proj.
 
     Without a cache this is a training/prefill pass over x: (B, S, D).
@@ -209,6 +210,20 @@ def attention_block(p, cfg, x, positions, *, cache=None, cache_len=None,
     `cache_len` may be a scalar (uniform batch) or a (B,) vector of
     per-row lengths — the continuous-batching slot pool, where every
     sequence in the batch is at a different depth.
+
+    With `block_tables` (B, nbs) int32 the cache is a PAGED pool instead:
+    k/v/pos leaves are (NB, block, ...) global block pools and row b's
+    positions [i*block, (i+1)*block) live in pool block
+    ``block_tables[b, i]``. `new_counts` (B,) gives how many of this
+    step's S tokens are real per row — rows write their first
+    ``new_counts[b]`` tokens at positions ``cache_len[b] + j`` through
+    the table and redirect the rest to reserved trash block 0 (so a row
+    whose table went stale, or a masked chunk tail, can never corrupt a
+    recycled block). Attention then gathers the row's dense
+    (nbs*block)-wide KV view from the table; lanes >= cache_len +
+    new_counts are masked to the same exact NEG_INF as the contiguous
+    path, which is what keeps paged and contiguous decoding bit-
+    identical.
 
     `impl` selects the kernel backend for the single-new-token decode
     hot spot (kernels.ops / kernels.decode_attn); 'ref'/'auto'-on-CPU
@@ -245,6 +260,44 @@ def attention_block(p, cfg, x, positions, *, cache=None, cache_len=None,
     if cache is None:
         out = attention(q, k, v, pos1, pos1, causal=True, window=window)
         new_cache = None
+    elif block_tables is not None:
+        ck, cv = cache["k"], cache["v"]          # (NB, block, KV, hd)
+        kv_pos = cache["pos"]                    # (NB, block)
+        blk = ck.shape[1]
+        nbs = block_tables.shape[1]
+        cl = jnp.asarray(cache_len, jnp.int32)
+        cl = jnp.broadcast_to(cl, (b,))
+        n_new = jnp.ones((b,), jnp.int32) if new_counts is None \
+            else jnp.asarray(new_counts, jnp.int32)
+        # scatter the new tokens through the table; invalid lanes (j >=
+        # n_new) land in trash block 0 whose content is never read
+        j = jnp.arange(s, dtype=jnp.int32)[None]         # (1, s)
+        wpos = cl[:, None] + j                           # (B, s)
+        valid = j < n_new[:, None]
+        bidx = jnp.take_along_axis(
+            block_tables, jnp.clip(wpos // blk, 0, nbs - 1), axis=1)
+        bidx = jnp.where(valid, bidx, 0)
+        off = jnp.where(valid, wpos % blk, 0)
+        ck = ck.at[bidx, off].set(k.astype(ck.dtype))
+        cv = cv.at[bidx, off].set(v.astype(cv.dtype))
+        kv_pos = kv_pos.at[bidx, off].set(pos1.astype(jnp.int32))
+        n_valid = jnp.minimum(cl + n_new, nbs * blk)
+        from repro.kernels import ops as KOPS
+        resolved = KOPS.resolve_impl(impl)
+        if resolved != "ref" and s == 1:
+            out = KOPS.decode_attention_paged_impl(
+                q[:, 0], ck, cv, kv_pos, block_tables, n_valid,
+                pos1[:, 0], window=window, impl=resolved)[:, None]
+        else:
+            # gather each row's dense view: block i of the table holds
+            # positions [i*blk, (i+1)*blk), so the view is position-
+            # ordered and masks exactly like the contiguous ring
+            gk = ck[block_tables].reshape(b, nbs * blk, kvh, hd)
+            gv = cv[block_tables].reshape(b, nbs * blk, kvh, hd)
+            gpos = kv_pos[block_tables].reshape(b, nbs * blk)
+            out = attention(q, gk, gv, pos1, gpos, causal=True,
+                            window=window, kv_len=n_valid)
+        new_cache = {"k": ck, "v": cv, "pos": kv_pos}
     else:
         ck, cv = cache["k"], cache["v"]
         smax = ck.shape[1]
@@ -292,6 +345,21 @@ def init_attn_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
         "k": jnp.zeros((batch, max_len, kvh, hd), dtype),
         "v": jnp.zeros((batch, max_len, kvh, hd), dtype),
         "pos": jnp.full((batch, max_len), -(10 ** 9), jnp.int32),
+    }
+
+
+def init_paged_attn_cache(cfg, num_blocks: int, block: int,
+                          dtype=jnp.bfloat16):
+    """Global paged KV pool for one attention sublayer: `num_blocks`
+    blocks of `block` tokens, shared by every slot via block tables
+    (block 0 is the serving layer's reserved trash target). Positions
+    init to the same -1e9 sentinel as the contiguous ring so unwritten
+    lanes are causally masked identically."""
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((num_blocks, block, kvh, hd), dtype),
+        "v": jnp.zeros((num_blocks, block, kvh, hd), dtype),
+        "pos": jnp.full((num_blocks, block), -(10 ** 9), jnp.int32),
     }
 
 

@@ -142,7 +142,8 @@ def init_params(cfg, key):
 def _apply_sublayer(cfg, sub: SubLayer, p, x, positions, *, cache=None,
                     cache_len=None, enc_out=None, window=0,
                     collect: bool = False, token_mask=None,
-                    ep_ctx=None, ep_state=None):
+                    ep_ctx=None, ep_state=None, block_tables=None,
+                    new_counts=None):
     """One sublayer (mixer + optional cross-attn + ffn) with residuals.
     When `ep_ctx`/`ep_state` are given, a MoE FFN executes through the
     EP slot data plane (``distributed.ep.moe_ep_ffn``) with the expert
@@ -156,7 +157,9 @@ def _apply_sublayer(cfg, sub: SubLayer, p, x, positions, *, cache=None,
                                   cache=None if cache is None
                                   else cache["attn"],
                                   cache_len=cache_len, window=window,
-                                  impl=cfg.impl)
+                                  impl=cfg.impl,
+                                  block_tables=block_tables,
+                                  new_counts=new_counts)
         if nc is not None:
             new_cache["attn"] = nc
     elif sub.mixer == "mamba":
@@ -411,6 +414,26 @@ def init_cache(cfg, params, batch: int, max_len: int):
     return caches
 
 
+def init_paged_cache(cfg, params, num_blocks: int, block: int):
+    """Paged-pool cache pytree: same per-period stacking as ``init_cache``
+    but each attention sublayer holds ONE global block pool
+    ``(num_blocks, block, kvh, hd)`` addressed by per-row block tables
+    instead of per-slot contiguous rows. Attention-only decoder patterns
+    only — recurrent mixers keep per-slot state, which block tables
+    cannot express."""
+    pattern = layer_pattern(cfg)
+    assert cfg.encdec is None and all(s.mixer == "attn" for s in pattern), \
+        f"{cfg.name}: paged KV requires an attention-only decoder"
+    np_ = cfg.num_layers // len(pattern)
+    dtype = jnp.dtype(cfg.dtype)
+    caches = []
+    for _ in pattern:
+        c = {"attn": L.init_paged_attn_cache(cfg, num_blocks, block, dtype)}
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (np_,) + a.shape), c))
+    return caches
+
+
 def decode_step(cfg, params, batch, cache, cache_len, ep_state=None, *,
                 window: int = 0, collect: bool = False, ep_ctx=None):
     """One decode iteration: batch['tokens'] is (B, S_new) — S_new=1 for
@@ -447,6 +470,16 @@ def decode_step(cfg, params, batch, cache, cache_len, ep_state=None, *,
     if token_mask is None and "active" in batch:
         token_mask = jnp.broadcast_to(batch["active"][:, None],
                                       (bsz, s_new))
+    # paged KV: per-row block tables (B, blocks_per_slot) into the global
+    # pool, plus per-row new-token counts (chunked prefill writes up to
+    # S_new tokens for prefilling rows, 1 for decoding rows, 0 for
+    # inactive rows — whose writes are redirected to the trash block)
+    block_tables = batch.get("block_tables")
+    new_counts = batch.get("new_counts")
+    if block_tables is not None and new_counts is not None and \
+            token_mask is None:
+        token_mask = jnp.arange(s_new, dtype=jnp.int32)[None] \
+            < jnp.asarray(new_counts, jnp.int32)[:, None]
 
     def body(h, xs):
         if ep_state is None:
@@ -464,7 +497,9 @@ def decode_step(cfg, params, batch, cache, cache_len, ep_state=None, *,
                                        collect=collect,
                                        token_mask=token_mask,
                                        ep_ctx=ep_ctx,
-                                       ep_state=layer_ep[j])
+                                       ep_state=layer_ep[j],
+                                       block_tables=block_tables,
+                                       new_counts=new_counts)
             new_caches.append(nc)
             ms.append(m)
         y = {}

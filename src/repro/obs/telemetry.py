@@ -72,6 +72,21 @@ class Telemetry:
         self.engine_occupancy = r.gauge(
             "engine_batch_occupancy",
             "active slots in the batched decode step")
+        # ----------------------------------------------------- paged KV
+        self.kv_blocks_used = r.gauge(
+            "kv_blocks_used", "paged-KV pool blocks currently referenced")
+        self.kv_blocks_free = r.gauge(
+            "kv_blocks_free", "paged-KV pool blocks on the free list")
+        self.kv_prefix_hits = r.counter(
+            "kv_prefix_hits_total",
+            "admissions that matched a cached prompt prefix")
+        self.kv_prefix_tokens_saved = r.counter(
+            "kv_prefix_tokens_saved_total",
+            "prompt tokens served from the prefix cache (prefill FLOPs "
+            "and KV writes skipped)")
+        self.kv_cow_copies = r.counter(
+            "kv_cow_copies_total",
+            "shared blocks copied on first divergent write")
         # ----------------------------------------- expert runtime
         self.runtime_starts = r.counter(
             "runtime_replica_starts_total",

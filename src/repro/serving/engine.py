@@ -48,7 +48,7 @@ from repro.core.control import (ControlPlane,  # noqa: F401 (re-export)
                                 IterationOutcome, MoElessController)
 from repro.models import transformer as T
 from repro.obs.telemetry import NOOP
-from repro.serving.kv import SlotKVCache
+from repro.serving.kv import PagedKVCache, SlotKVCache
 from repro.serving.scheduler import (ContinuousBatchingScheduler, GenRequest,
                                      RequestMetrics, SamplingParams,
                                      percentile_summary)
@@ -129,9 +129,18 @@ class _Session:
 
     def __init__(self, cfg, params, num_slots: int, max_len: int,
                  eos_id, control, time_scale: float, runtime=None,
-                 batch_mult: int = 1):
-        self.kv = SlotKVCache(cfg, params, num_slots, max_len,
-                              batch_multiple=batch_mult)
+                 batch_mult: int = 1, serving=None):
+        spec = serving if serving is not None else cfg.serving
+        if spec.kv == "paged":
+            self.kv = PagedKVCache(cfg, params, num_slots, max_len,
+                                   block=spec.kv_block,
+                                   num_blocks=spec.kv_blocks,
+                                   batch_multiple=batch_mult,
+                                   prefix_cache=spec.prefix_cache,
+                                   chunked=spec.prefill_chunk > 0)
+        else:
+            self.kv = SlotKVCache(cfg, params, num_slots, max_len,
+                                  batch_multiple=batch_mult)
         rows = self.kv.rows   # num_slots padded to the EP shard multiple
         self.batch_mult = batch_mult
         self.sched = ContinuousBatchingScheduler(self.kv, eos_id=eos_id)
@@ -145,6 +154,12 @@ class _Session:
         self.topp = np.ones(rows, np.float32)
         self.seed = np.zeros(rows, np.int32)
         self.count = np.zeros(rows, np.int32)          # tokens sampled
+        # chunked prefill: per-slot prompt (fed chunk-by-chunk into the
+        # batched step) and its length; a slot is mid-prefill while
+        # kv.lengths[slot] < plen[slot]
+        self.plen = np.zeros(rows, np.int32)
+        self.prompts: dict[int, np.ndarray] = {}
+        self.cow_seen = 0              # kv.cow_blocks already counted
         self.occupancy: list[int] = []
         self.iters = 0
         self.prefills = 0
@@ -179,7 +194,7 @@ class ServingEngine:
                  controller: ControlPlane | None = None,
                  window: int = 0, impl: str | None = None,
                  expert_runtime: str = "off", mesh=None,
-                 telemetry=None, name: str = "engine"):
+                 telemetry=None, name: str = "engine", serving=None):
         if impl is not None:   # override the config's kernel backend
             from repro.kernels.ops import resolve_impl
             resolve_impl(impl)   # validate eagerly, not at first step
@@ -189,6 +204,26 @@ class ServingEngine:
                              "(expected 'off' or 'on')")
         if expert_runtime == "on" and not cfg.is_moe:
             raise ValueError("expert_runtime='on' needs an MoE model")
+        # `serving` (a configs.ServingSpec) overrides cfg.serving —
+        # validate the knob dependency chain eagerly, not at first step
+        spec = serving if serving is not None else cfg.serving
+        if spec.kv not in ("contiguous", "paged"):
+            raise ValueError(f"serving.kv={spec.kv!r} "
+                             "(expected 'contiguous' or 'paged')")
+        if spec.kv != "paged" and (spec.prefill_chunk > 0
+                                   or spec.prefix_cache):
+            raise ValueError("prefill_chunk / prefix_cache require "
+                             "serving.kv='paged'")
+        if spec.prefix_cache and spec.prefill_chunk <= 0:
+            raise ValueError(
+                "prefix_cache requires prefill_chunk > 0 — the solo "
+                "splice path always recomputes the whole prompt, so a "
+                "prefix hit could never skip work")
+        if spec.kv == "paged" and (cfg.encdec is not None or any(
+                sub.mixer != "attn" for sub in T.layer_pattern(cfg))):
+            raise ValueError("serving.kv='paged' needs an attention-only "
+                             "decoder (no SSM state, no enc-dec)")
+        self.serving = spec
         self.cfg, self.params = cfg, params
         self.max_len = max_len
         self.controller = controller
@@ -404,7 +439,8 @@ class ServingEngine:
             self._session = _Session(self.cfg, self.params, num_slots,
                                      self.max_len, eos_id, control,
                                      time_scale, runtime=runtime,
-                                     batch_mult=batch_mult)
+                                     batch_mult=batch_mult,
+                                     serving=self.serving)
 
     def close(self) -> None:
         with self._lock:
@@ -502,6 +538,8 @@ class ServingEngine:
             sess.control is not None and sess.control.predictor is not None
             and self.cfg.is_moe)
         tel = self.telemetry
+        if self.serving.prefill_chunk > 0:
+            return self._step_chunked(sess, collect, events)
         # admission: prefill every arrived request that fits a slot
         while (req := sched.pop_admissible(sess.now)) is not None:
             t0 = time.perf_counter()
@@ -545,7 +583,8 @@ class ServingEngine:
                     track = f"{self.name}/req{req.rid}"
                     tel.span(track, "queue", req.arrival, t_admit)
                     tel.span(track, "prefill", t_admit, sess.now,
-                             args={"prompt_len": plen})
+                             args={"prompt_len": plen,
+                                   "prefix_hit_len": req.prefix_hit_len})
                     self._marks[req.rid] = sess.now
                 if done:
                     self._finish_req(req, sess.now)
@@ -557,8 +596,15 @@ class ServingEngine:
         # then one jitted sampling call over every slot
         t0 = time.perf_counter()
         t_clock0 = sess.now
-        lengths, active = kv.step_lengths()
-        batch = {"tokens": jnp.asarray(sess.cur[:, None]), "active": active}
+        if isinstance(kv, PagedKVCache):
+            lengths, active, tables = kv.step_state()
+            batch = {"tokens": jnp.asarray(sess.cur[:, None]),
+                     "active": active, "block_tables": tables,
+                     "new_counts": active.astype(jnp.int32)}
+        else:
+            lengths, active = kv.step_lengths()
+            batch = {"tokens": jnp.asarray(sess.cur[:, None]),
+                     "active": active}
         if sess.runtime is not None:
             # EP slot data plane: the MoE layers execute the control
             # plane's plans through the runtime's live slot
@@ -612,16 +658,181 @@ class ServingEngine:
             if tel.tracing:
                 tel.span(self.name, "decode_step", t_clock0, sess.now,
                          args={"occupancy": n_active})
-        kv.advance()
+        capped = set(kv.advance())
         for slot in list(sched.running):
             tok = int(toks[slot])
             sess.cur[slot] = tok
             sess.count[slot] += 1
             req = sched.running[slot]
             done = sched.on_token(slot, tok, sess.now)
+            if not done and slot in capped:
+                # KV ring/blocks at capacity: one more decode would
+                # overwrite live cache — finish with reason "length"
+                sched.force_finish(slot, sess.now)
+                done = True
             events.append(TokenEvent(req.rid, tok, done))
             if done and tel.enabled:
                 self._finish_req(req, sess.now)
+        if tel.enabled and isinstance(kv, PagedKVCache):
+            tel.kv_blocks_used.set(kv.used_blocks)
+            tel.kv_blocks_free.set(kv.free_blocks)
+        return events
+
+    def _step_chunked(self, sess, collect, events) -> list[TokenEvent]:
+        """Chunked-prefill iteration (paged KV only): admission is pure
+        table work — ``kv.begin`` matches the prefix cache, refcount-
+        shares the matched blocks, and reserves the rest; NO solo model
+        call. Each mid-prefill slot then contributes up to
+        ``prefill_chunk`` prompt tokens per iteration to the SAME
+        batched step the decoding slots run, as extra masked rows — the
+        decode batch never stalls behind a long prompt. A slot's first
+        output token is sampled from the logits of its final prompt
+        position the step its last chunk lands."""
+        sched, kv = sess.sched, sess.kv
+        tel = self.telemetry
+        chunk = self.serving.prefill_chunk
+        while (req := sched.pop_admissible(sess.now)) is not None:
+            slot = kv.alloc()
+            hit = kv.begin(slot, req.prompt, req.max_new_tokens,
+                           owner=req.rid)
+            req.prefix_hit_len = hit
+            sess.bind_slot(slot, req)
+            prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+            sess.prompts[slot] = prompt
+            sess.plen[slot] = prompt.shape[0]
+            sched.start(req, slot, sess.now)
+            sess.prefills += 1
+            if tel.enabled:
+                tel.sched_admitted.inc()
+                tel.sched_queue_delay.observe(
+                    max(sess.now - req.arrival, 0.0))
+                if hit:
+                    tel.kv_prefix_hits.inc()
+                    tel.kv_prefix_tokens_saved.inc(hit)
+                cow = kv.cow_blocks - sess.cow_seen
+                if cow:
+                    tel.kv_cow_copies.inc(cow)
+                if tel.tracing:
+                    tel.span(f"{self.name}/req{req.rid}", "queue",
+                             req.arrival, sess.now,
+                             args={"prefix_hit_len": hit})
+            sess.cow_seen = kv.cow_blocks
+        if tel.enabled:
+            tel.sched_pending.set(len(sched.pending))
+        if not sched.running:
+            return events
+        t0 = time.perf_counter()
+        t_clock0 = sess.now
+        rows = kv.rows
+        counts = np.zeros(rows, np.int32)
+        first_rows: set[int] = set()   # prompt completes this step
+        any_prefill = False
+        for slot in sched.running:
+            left = int(sess.plen[slot]) - int(kv.lengths[slot])
+            if left > 0:
+                any_prefill = True
+                counts[slot] = min(chunk, left)
+                if counts[slot] == left:
+                    first_rows.add(slot)
+            else:
+                counts[slot] = 1
+        s_new = chunk if any_prefill else 1   # two jit entries total
+        tokens = np.zeros((rows, s_new), np.int32)
+        for slot in sched.running:
+            c = int(counts[slot])
+            pos = int(kv.lengths[slot])
+            if pos < sess.plen[slot]:
+                tokens[slot, :c] = sess.prompts[slot][pos:pos + c]
+            else:
+                tokens[slot, 0] = sess.cur[slot]
+        lengths, active, tables = kv.step_state()
+        counts_j = jnp.asarray(counts)
+        mask = jnp.arange(s_new, dtype=jnp.int32)[None] \
+            < counts_j[:, None]
+        batch = {"tokens": jnp.asarray(tokens), "active": active,
+                 "token_mask": mask, "block_tables": tables,
+                 "new_counts": counts_j}
+        phase = "mixed" if any_prefill else "decode"
+        if sess.runtime is not None:
+            step_fn = self._get_ep_step(collect, dataclasses.replace(
+                sess.runtime.ctx, pad_rows=kv.rows - kv.num_slots))
+            logits, kv.cache, metrics = step_fn(
+                self.params, batch, kv.cache, lengths,
+                sess.runtime.ep_state())
+        else:
+            step_fn = self._get_step(collect)
+            logits, kv.cache, metrics = step_fn(
+                self.params, batch, kv.cache, lengths)
+        t_sync = time.perf_counter()
+        # each row's next-token logits sit at its LAST written position
+        idx = jnp.asarray(np.maximum(counts - 1, 0))
+        last = jnp.take_along_axis(logits, idx[:, None, None],
+                                   axis=1)[:, 0]
+        if any(sess.temp[s] > 0 for s in sched.running):
+            toks = np.asarray(T.sample_tokens(
+                last, jnp.asarray(sess.temp), jnp.asarray(sess.topk),
+                jnp.asarray(sess.topp), jnp.asarray(sess.seed),
+                jnp.asarray(sess.count)))
+        else:
+            toks = np.asarray(jnp.argmax(last, axis=-1))
+        sync_s = time.perf_counter() - t_sync
+        dt = None
+        if sess.control is not None and "expert_load" in metrics:
+            out = sess.control.step(
+                sess.now, self._gate_inputs(metrics),
+                metrics["expert_load"], token_mask=mask.reshape(-1),
+                dropped=metrics.get("dropped"), phase=phase)
+            dt = out.latency_s
+            if sess.runtime is not None:
+                sess.runtime.apply(sess.now, out.events, phase=phase,
+                                   compute_s=out.latency_s)
+        self._drive_controller(metrics, token_mask=mask.reshape(-1))
+        if dt is None:
+            dt = time.perf_counter() - t0
+        sess.now += dt * sess.time_scale
+        sess.iters += 1
+        self.iteration += 1
+        n_active = len(sched.running)
+        sess.occupancy.append(n_active)
+        if tel.enabled:
+            tel.engine_steps.labels(phase=phase).inc()
+            tel.engine_step_seconds.labels(phase=phase).observe(
+                time.perf_counter() - t0)
+            tel.engine_host_sync.observe(sync_s)
+            tel.engine_occupancy.set(n_active)
+            if tel.tracing:
+                tel.span(self.name, "decode_step", t_clock0, sess.now,
+                         args={"occupancy": n_active, "phase": phase})
+        capped = set(kv.advance(counts))
+        emitted = 0
+        for slot in list(sched.running):
+            req = sched.running[slot]
+            if kv.lengths[slot] < sess.plen[slot]:
+                continue                 # still mid-prefill: no token yet
+            if slot in first_rows:
+                sess.count[slot] = 1     # the request's first token
+            else:
+                sess.count[slot] += 1
+            tok = int(toks[slot])
+            sess.cur[slot] = tok
+            emitted += 1
+            done = sched.on_token(slot, tok, sess.now)  # TTFT on first
+            if not done and slot in capped:
+                sched.force_finish(slot, sess.now)
+                done = True
+            events.append(TokenEvent(req.rid, tok, done))
+            if tel.enabled and tel.tracing and slot in first_rows:
+                tel.span(f"{self.name}/req{req.rid}", "prefill",
+                         req.t_admitted, sess.now,
+                         args={"prompt_len": int(sess.plen[slot]),
+                               "prefix_hit_len": req.prefix_hit_len})
+                self._marks[req.rid] = sess.now
+            if done and tel.enabled:
+                self._finish_req(req, sess.now)
+        if tel.enabled:
+            tel.engine_tokens.inc(emitted)
+            tel.kv_blocks_used.set(kv.used_blocks)
+            tel.kv_blocks_free.set(kv.free_blocks)
         return events
 
     def _finish_req(self, req: GenRequest, t: float) -> None:

@@ -102,6 +102,8 @@ class GenRequest:
     t_first_token: float = math.nan
     t_finish: float = math.nan
     finish_reason: str = ""    # length | eos | stop | cancelled | replica_failed
+    reject_reason: str = ""    # structured admission-reject detail
+    prefix_hit_len: int = 0    # prompt tokens served by the prefix cache
 
     @property
     def prompt_len(self) -> int:
@@ -197,10 +199,25 @@ class ContinuousBatchingScheduler:
 
     def submit(self, req: GenRequest) -> bool:
         """Admission control: a request must fit its prompt plus token
-        budget inside one slot's ring buffer (otherwise the early KV it
-        would still need gets overwritten). Returns False on reject."""
-        if req.prompt_len + req.max_new_tokens > self.kv.max_len \
-                or req.prompt_len == 0 or req.max_new_tokens < 1:
+        budget inside one slot's ring buffer — and, on a paged pool,
+        inside the whole block pool (``kv.admission_error``). Returns
+        False on reject, with ``req.reject_reason`` naming exactly what
+        didn't fit (tokens-needed vs blocks-available) so the gateway can
+        emit a structured 4xx body instead of a mid-step crash."""
+        reason = ""
+        if req.prompt_len == 0:
+            reason = "empty prompt"
+        elif req.max_new_tokens < 1:
+            reason = f"max_new_tokens={req.max_new_tokens} must be >= 1"
+        elif req.prompt_len + req.max_new_tokens > self.kv.max_len:
+            reason = (f"needs {req.prompt_len + req.max_new_tokens} KV "
+                      f"tokens, a slot holds max_len={self.kv.max_len}")
+        else:
+            check = getattr(self.kv, "admission_error", None)
+            if check is not None:
+                reason = check(req.prompt_len, req.max_new_tokens)
+        if reason:
+            req.reject_reason = reason
             self.rejected.append(req)
             return False
         key = (req.arrival, self._seq)
@@ -239,8 +256,16 @@ class ContinuousBatchingScheduler:
         head = self._peek(self._ready)
         if head is None:
             return None
-        heapq.heappop(self._ready)
         req = head[-1]
+        # paged pool: the head must also fit its block footprint RIGHT
+        # NOW (free + prefix-evictable blocks). Head-of-line blocking is
+        # deliberate — skipping ahead would break the FCFS/priority
+        # admission order the latency metrics are defined over.
+        can_admit = getattr(self.kv, "can_admit", None)
+        if can_admit is not None and not can_admit(
+                req.prompt_len, req.max_new_tokens, req.prompt):
+            return None
+        heapq.heappop(self._ready)
         del self._keys[id(req)]
         del self._live[id(req)]
         return req
@@ -295,6 +320,23 @@ class ContinuousBatchingScheduler:
         self.kv.release(slot)
         self.finished.append(req)
         return True
+
+    def force_finish(self, slot: int, now: float, *,
+                     reason: str = "length") -> GenRequest | None:
+        """Finish the request in `slot` immediately (KV ring/blocks at
+        capacity — continuing would overwrite live cache). The tokens
+        already recorded stand; the slot is recycled like a normal
+        finish. Returns the request, or None if the slot is idle."""
+        req = self.running.pop(slot, None)
+        if req is None:
+            return None
+        req.finish_reason = reason
+        req.t_finish = now
+        if math.isnan(req.t_first_token):
+            req.t_first_token = now
+        self.kv.release(slot)
+        self.finished.append(req)
+        return req
 
     def cancel(self, req: GenRequest, now: float, *,
                reason: str = "cancelled") -> bool:

@@ -80,6 +80,23 @@ print("PARITY_EP4=", int(toks1 == toks4), sep="")
 print("PARITY_EP4_TP2=", int(toks1 == toks42), sep="")
 print("SAME_ITERS=", int(res1.iterations == res4.iterations), sep="")
 
+# ---- paged KV + chunked prefill parity at ep=4 -----------------------
+# same trace through the paged pool with chunked prefill folded into the
+# batched decode step, expert runtime on: tokens must equal the solo-
+# prefill contiguous ep=1 reference bit-for-bit (drop-free capacity)
+from repro.configs import ServingSpec
+reqs_p = make_requests()
+eng_p = ServingEngine(cfg, params, max_len=32, expert_runtime="on",
+                      mesh=mesh4,
+                      serving=ServingSpec(kv="paged", kv_block=5,
+                                          prefill_chunk=3,
+                                          prefix_cache=True))
+ctl_p = ControlPlane(cfg, "moeless", num_devices=8,
+                     max_replicas_per_device=2)
+eng_p.serve(reqs_p, num_slots=3, control=ctl_p)
+toks_p = {r.rid: tuple(r.tokens) for r in reqs_p}
+print("PARITY_PAGED_CHUNKED_EP4=", int(toks_p == toks1), sep="")
+
 # ---- runtime meters at ep=4 == analytic pool exactly -----------------
 rt = res4.runtime
 pool_counts = (
@@ -238,6 +255,10 @@ def test_engine_tokens_bit_identical_ep4(markers):
 
 def test_engine_tokens_ep4_tp2(markers):
     assert markers["PARITY_EP4_TP2"] == "1"
+
+
+def test_paged_chunked_tokens_bit_identical_ep4(markers):
+    assert markers["PARITY_PAGED_CHUNKED_EP4"] == "1"
 
 
 def test_runtime_meters_match_analytic_pool_at_ep4(markers):

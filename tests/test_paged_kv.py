@@ -1,0 +1,295 @@
+"""Paged KV pool + radix prefix cache + chunked prefill (tier-1).
+
+Engine-level contract: greedy tokens are BIT-identical between the
+contiguous slot layout and the paged pool — for solo prefill, for
+chunked prefill at any chunk size, and for warm prefix-cache hits vs a
+cold re-prefill. All identity runs use an ample MoE capacity factor
+(drop-free): inactive batch rows carry layout-dependent garbage hidden
+states, and under tight capacity those masked garbage tokens compete
+for expert slots and perturb which ACTIVE tokens get dropped — the
+documented boundary of the bit-identity guarantee (README).
+
+KV-level contract: refcounts never go negative, copy-on-write leaves
+the cached chain untouched, eviction under pool pressure frees LRU
+cache-only chains, impossible admissions reject with a structured
+reason, and the analytic ``costmodel.kv_bytes_per_block`` equals the
+live pool's per-block bytes.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ServingSpec, get_config
+from repro.core.costmodel import kv_bytes_per_block
+from repro.models import model as M
+from repro.serving.engine import ServingEngine
+from repro.serving.kv import PagedKVCache, SlotKVCache
+from repro.serving.scheduler import ContinuousBatchingScheduler, GenRequest
+
+KEY = jax.random.PRNGKey(4)
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    # drop-free: bit-identity across KV layouts holds only when no MoE
+    # capacity drops occur (see module docstring)
+    cfg = cfg.with_(moe=dataclasses.replace(
+        cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+    params = M.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _requests(cfg, n=4, seed=7):
+    rng = np.random.default_rng(seed)
+    specs = [(7, 6, 0.0), (11, 5, 0.0), (3, 7, 0.1), (9, 4, 0.2)][:n]
+    return [GenRequest(
+        rid=i, arrival=arr,
+        prompt=rng.integers(1, cfg.vocab_size, plen).astype(np.int32),
+        max_new_tokens=gen) for i, (plen, gen, arr) in enumerate(specs)]
+
+
+def _serve(setup, spec, *, num_slots=3, reqs=None):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, max_len=MAX_LEN, serving=spec)
+    reqs = reqs if reqs is not None else _requests(cfg)
+    eng.serve(reqs, num_slots=num_slots)
+    return {r.rid: tuple(r.tokens) for r in reqs}
+
+
+@pytest.fixture(scope="module")
+def baseline(setup):
+    """Contiguous-layout greedy tokens — the identity reference."""
+    return _serve(setup, ServingSpec())
+
+
+# --------------------------------------------------- engine identity
+
+
+def test_paged_solo_bit_identical(setup, baseline):
+    """Solo prefill over the paged pool, non-dividing block size."""
+    assert _serve(setup, ServingSpec(kv="paged", kv_block=5)) == baseline
+
+
+def test_chunked_prefill_bit_identical(setup, baseline):
+    """Chunked prefill folded into the batched decode step == solo."""
+    spec = ServingSpec(kv="paged", kv_block=5, prefill_chunk=3)
+    assert _serve(setup, spec) == baseline
+
+
+def test_random_block_chunk_sizes_preserve_tokens(setup, baseline):
+    """Seeded random (block, chunk) geometry sweep — tokens invariant."""
+    rng = np.random.default_rng(13)
+    for _ in range(2):
+        block = int(rng.integers(2, 12))
+        chunk = int(rng.integers(1, 9))
+        spec = ServingSpec(kv="paged", kv_block=block,
+                           prefill_chunk=chunk)
+        assert _serve(setup, spec) == baseline, (block, chunk)
+
+
+def test_cancel_mid_decode_identity(setup):
+    """A mid-decode cancellation (slot recycled, successor admitted into
+    the freed blocks) leaves every surviving request's tokens identical
+    between layouts."""
+    def run(spec):
+        cfg, params = setup
+        eng = ServingEngine(cfg, params, max_len=MAX_LEN, serving=spec)
+        reqs = _requests(cfg)
+        eng.start(num_slots=2)
+        handles = [eng.submit(r) for r in reqs]
+        victim = handles[0]
+        while len(victim.tokens) < 2:
+            eng.step()
+        assert eng.cancel(victim)
+        eng.run()
+        eng.close()
+        assert reqs[0].finish_reason == "cancelled"
+        return {r.rid: tuple(r.tokens) for r in reqs[1:]}
+
+    base = run(ServingSpec())
+    paged = run(ServingSpec(kv="paged", kv_block=5, prefill_chunk=3))
+    assert paged == base
+
+
+def test_prefix_warm_equals_cold(setup):
+    """Second request with an identical prompt hits the radix cache
+    (prefill skipped for the shared prefix) and still produces the exact
+    cold-run tokens; hit/saved meters advance."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab_size, 10).astype(np.int32)
+
+    def req(rid, arrival):
+        return GenRequest(rid=rid, arrival=arrival, prompt=prompt.copy(),
+                          max_new_tokens=5)
+
+    spec = ServingSpec(kv="paged", kv_block=4, prefill_chunk=3,
+                       prefix_cache=True)
+    eng = ServingEngine(cfg, params, max_len=MAX_LEN, serving=spec)
+    warm = [req(0, 0.0), req(1, 5.0)]   # sequential: 1 starts after 0
+    eng.start(num_slots=2)
+    for r in warm:
+        eng.submit(r)
+    eng.run()
+    kv = eng._sess.kv
+    assert kv.prefix.hits >= 1
+    assert kv.prefix.tokens_saved == warm[1].prefix_hit_len
+    eng.close()
+    cold = [req(0, 0.0)]
+    _serve(setup, ServingSpec(kv="paged", kv_block=4, prefill_chunk=3),
+           reqs=cold, num_slots=2)
+    assert warm[0].tokens == warm[1].tokens == cold[0].tokens
+    assert warm[0].prefix_hit_len == 0
+    assert warm[1].prefix_hit_len > 0
+
+
+# ----------------------------------------------------- KV-level pool
+
+
+def _pool(setup, **kw):
+    cfg, params = setup
+    kw.setdefault("block", 4)
+    return PagedKVCache(cfg, params, kw.pop("num_slots", 2),
+                        kw.pop("max_len", 16), **kw)
+
+
+def test_insert_guards_both_layouts(setup):
+    cfg, params = setup
+    for kv in (SlotKVCache(cfg, params, 2, 16), _pool(setup)):
+        cache = (None if isinstance(kv, PagedKVCache)
+                 else kv.cache)  # contents unused before the guard fires
+        with pytest.raises(ValueError, match="never alloc'd"):
+            kv._check_insertable(0)
+        slot = kv.alloc()
+        kv._check_insertable(slot)     # alloc'd + idle: fine
+        kv.lengths[slot] = 1
+        kv.active[slot] = True
+        with pytest.raises(ValueError, match="double insert"):
+            kv._check_insertable(slot)
+        with pytest.raises(ValueError, match="out of range"):
+            kv._check_insertable(99)
+
+
+def test_advance_caps_at_max_len(setup):
+    cfg, params = setup
+    kv = SlotKVCache(cfg, params, 2, max_len=8)
+    slot = kv.alloc()
+    kv.lengths[slot] = 6
+    kv.active[slot] = True
+    assert kv.advance() == []          # 6 -> 7
+    capped = kv.advance(np.array([2, 0]))   # 7 -> 9, saturates at 8
+    assert capped == [slot]
+    assert kv.lengths[slot] == 8
+
+
+def test_force_finish_on_capacity(setup):
+    cfg, params = setup
+    kv = SlotKVCache(cfg, params, 2, max_len=8)
+    sched = ContinuousBatchingScheduler(kv)
+    req = GenRequest(rid=0, arrival=0.0,
+                     prompt=np.arange(1, 5, dtype=np.int32),
+                     max_new_tokens=4)
+    assert sched.submit(req)
+    slot = kv.alloc()
+    kv.lengths[slot] = 4
+    kv.active[slot] = True
+    sched.pop_admissible(0.0)
+    sched.start(req, slot, 0.0)
+    req.tokens = [5, 6]
+    out = sched.force_finish(slot, 1.0)
+    assert out is req and req.finish_reason == "length"
+    assert req.tokens == [5, 6]
+    assert not kv.active[slot] and slot in kv._free
+    assert sched.done
+
+
+def test_refcount_never_negative(setup):
+    kv = _pool(setup)
+    b = kv._alloc_block()
+    kv._decref(b)
+    with pytest.raises(AssertionError, match="negative"):
+        kv._decref(b)
+
+
+def test_begin_release_returns_all_blocks(setup):
+    kv = _pool(setup, chunked=True)
+    slot = kv.alloc()
+    kv.begin(slot, np.arange(1, 8, dtype=np.int32), max_new=4)
+    assert kv.used_blocks == 3          # ceil((7 + 4) / 4)
+    kv.lengths[slot] = 9
+    kv.release(slot)
+    assert kv.used_blocks == 0
+    assert (kv.refcount[1:] == 0).all() and kv.refcount[0] == 1
+
+
+def test_cow_preserves_cached_chain(setup):
+    """A prefix match ending inside a block copies that boundary block
+    into the new reservation; the cached chain keeps its original."""
+    kv = _pool(setup, num_slots=2, max_len=16, prefix_cache=True,
+               chunked=True)
+    p = np.arange(1, 11, dtype=np.int32)          # 10 tokens, block=4
+    s0 = kv.alloc()
+    kv.begin(s0, p, max_new=2)
+    kv.lengths[s0] = 10                            # prompt fully written
+    kv.release(s0)                                 # caches 2 full + tail
+    cached_tail = kv.tables.copy()                 # released: zeroed
+    q = np.concatenate([p, np.array([99, 98], np.int32)])
+    s1 = kv.alloc()
+    hit = kv.begin(s1, q, max_new=2)
+    assert hit == 10                               # full + partial match
+    assert kv.cow_blocks == 1
+    # shared full blocks are refcount-shared; the boundary block is a
+    # private copy, so the cached node's block is NOT in s1's table
+    matched, chain = kv.prefix.match(p)
+    assert matched == 10
+    tail_block = chain[2]
+    row = kv.tables[s1, :int(kv.nblocks[s1])]
+    assert chain[0] in row and chain[1] in row
+    assert tail_block not in row
+    assert kv.refcount[tail_block] == 1            # cache ref only
+
+
+def test_eviction_under_pressure_and_structured_reject(setup):
+    cfg, params = setup
+    kv = PagedKVCache(cfg, params, 2, 16, block=4, num_blocks=6,
+                      prefix_cache=True, chunked=True)
+    s0 = kv.alloc()
+    kv.begin(s0, np.arange(1, 9, dtype=np.int32), max_new=4)  # 3 blocks
+    kv.lengths[s0] = 12
+    kv.release(s0)                   # 2 prompt blocks cached, gen freed
+    assert kv.free_blocks == 5 - 2
+    # disjoint request needing 4 blocks: admissible only via eviction
+    q = np.arange(50, 62, dtype=np.int32)
+    assert kv.can_admit(12, 4, q)
+    s1 = kv.alloc()
+    kv.begin(s1, q, max_new=4)
+    assert kv.free_blocks == 0       # evicted LRU cache-only blocks
+    # a request that can NEVER fit rejects with a structured reason
+    sched = ContinuousBatchingScheduler(kv)
+    big = GenRequest(rid=9, arrival=0.0,
+                     prompt=np.arange(1, 13, dtype=np.int32),
+                     max_new_tokens=4)
+    kv2 = PagedKVCache(cfg, params, 2, 16, block=4, num_blocks=3,
+                       chunked=True)
+    sched2 = ContinuousBatchingScheduler(kv2)
+    assert not sched2.submit(big)
+    assert "blocks" in big.reject_reason and "16" in big.reject_reason
+    assert sched2.rejected == [big]
+
+
+def test_costmodel_block_bytes_crosscheck(setup):
+    cfg, params = setup
+    for block in (4, 16):
+        kv = PagedKVCache(cfg, params, 2, 32, block=block)
+        assert kv.block_bytes == kv_bytes_per_block(cfg, block)
+
+
+def test_paged_rejects_recurrent_stacks(setup):
+    cfg = get_config("jamba-v0.1-52b", smoke=True)
+    params = M.init_params(cfg, KEY)
+    with pytest.raises(ValueError, match="attention-only"):
+        PagedKVCache(cfg, params, 2, 16)

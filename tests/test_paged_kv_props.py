@@ -1,0 +1,97 @@
+"""Paged-KV property tests (optional dep: hypothesis).
+
+Two properties: (1) engine greedy tokens are invariant under ANY
+(block, chunk) geometry — drop-free, per the bit-identity contract in
+``tests/test_paged_kv.py``; (2) the block allocator conserves blocks
+under random admit/advance/release interleavings (free + used + trash
+always partitions the pool; everything returns on release)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip property tests cleanly
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ServingSpec, get_config
+from repro.models import model as M
+from repro.serving.engine import ServingEngine
+from repro.serving.kv import PagedKVCache
+
+KEY = jax.random.PRNGKey(6)
+_CTX: dict = {}
+
+
+def _ctx():
+    if not _CTX:
+        cfg = get_config("mixtral-8x7b", smoke=True)
+        cfg = cfg.with_(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+        params = M.init_params(cfg, KEY)
+        _CTX.update(cfg=cfg, params=params, baseline=None)
+    return _CTX
+
+
+def _serve(spec):
+    c = _ctx()
+    rng = np.random.default_rng(7)
+    from repro.serving.scheduler import GenRequest
+    reqs = [GenRequest(
+        rid=i, arrival=arr,
+        prompt=rng.integers(1, c["cfg"].vocab_size, plen).astype(np.int32),
+        max_new_tokens=gen)
+        for i, (plen, gen, arr) in enumerate(
+            [(7, 5, 0.0), (11, 4, 0.0), (5, 6, 0.1)])]
+    eng = ServingEngine(c["cfg"], c["params"], max_len=24, serving=spec)
+    eng.serve(reqs, num_slots=2)
+    return {r.rid: tuple(r.tokens) for r in reqs}
+
+
+@given(block=st.integers(2, 10), chunk=st.integers(1, 8))
+@settings(max_examples=4, deadline=None)
+def test_tokens_invariant_under_block_chunk_geometry(block, chunk):
+    c = _ctx()
+    if c["baseline"] is None:
+        c["baseline"] = _serve(ServingSpec())
+    out = _serve(ServingSpec(kv="paged", kv_block=block,
+                             prefill_chunk=chunk))
+    assert out == c["baseline"], (block, chunk)
+
+
+@given(data=st.data(), block=st.integers(1, 6))
+@settings(max_examples=15, deadline=None)
+def test_allocator_conserves_blocks(data, block):
+    c = _ctx()
+    max_len = 24
+    kv = PagedKVCache(c["cfg"], c["params"], 3, max_len, block=block,
+                      prefix_cache=True, chunked=True)
+    live = []
+    for _ in range(data.draw(st.integers(1, 8))):
+        if live and data.draw(st.booleans()):
+            slot, plen = live.pop(data.draw(
+                st.integers(0, len(live) - 1)))
+            kv.lengths[slot] = data.draw(st.integers(0, max_len))
+            kv.release(slot)
+        elif kv.num_free:
+            plen = data.draw(st.integers(1, max_len - 2))
+            max_new = data.draw(st.integers(1, max_len - plen))
+            prompt = np.asarray(
+                data.draw(st.lists(st.integers(1, 6), min_size=plen,
+                                   max_size=plen)), np.int32)
+            if not kv.can_admit(plen, max_new, prompt):
+                continue
+            slot = kv.alloc()
+            kv.begin(slot, prompt, max_new)
+            live.append((slot, plen))
+        # conservation: trash + free + used partitions the pool, and
+        # used equals the blocks the tables + prefix cache reference
+        assert kv.free_blocks + kv.used_blocks + 1 == kv.num_blocks
+        assert (kv.refcount >= 0).all()
+    for slot, plen in live:
+        kv.release(slot)
+    # prefix-cached chains are the only remaining holders; evicting
+    # everything must return every block to the free list
+    kv.prefix.evict(kv.num_blocks)
+    assert kv.used_blocks == 0
+    assert (kv.refcount[1:] == 0).all()
