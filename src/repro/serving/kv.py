@@ -32,6 +32,8 @@ for any block size.
 """
 from __future__ import annotations
 
+import heapq
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -276,13 +278,17 @@ class RadixPrefixCache:
                 break
             node, i = child, i + self.block
 
-    def evictable(self) -> int:
+    def evictable(self, exclude=()) -> int:
         """Blocks that ``evict`` could free, now or after peeling their
         descendants: a node is evictable iff it is cache-only
-        (refcount 1) and its entire subtree is too — a pinned descendant
-        keeps the node from ever becoming a free leaf."""
+        (refcount 1), its block is not in `exclude` (blocks a pending
+        admission intends to share/pin), and its entire subtree is too —
+        a pinned descendant keeps the node from ever becoming a free
+        leaf."""
+        exclude = frozenset(int(b) for b in exclude)
         def count(n: _RadixNode) -> tuple[bool, int]:
-            all_ok = self.pool.refcount[n.block] == 1
+            all_ok = (self.pool.refcount[n.block] == 1
+                      and n.block not in exclude)
             total = 0
             for c in n.children.values():
                 ok, t = count(c)
@@ -293,18 +299,27 @@ class RadixPrefixCache:
 
     def evict(self, need: int) -> int:
         """LRU-evict cache-only leaf chains until `need` blocks were
-        freed (or nothing evictable remains). Returns blocks freed."""
+        freed (or nothing evictable remains). Returns blocks freed.
+
+        One trie walk seeds a min-heap of evictable leaves keyed by
+        ``last_used``; freeing a leaf may expose its parent, which is
+        pushed as it becomes a childless cache-only node — evicting k
+        blocks is O(n + k log n), not O(n^2)."""
         freed = 0
-        while freed < need:
-            leaves = [n for n in self._walk()
-                      if not n.children
-                      and self.pool.refcount[n.block] == 1]
-            if not leaves:
-                break
-            victim = min(leaves, key=lambda n: n.last_used)
-            del victim.parent.children[victim.tokens]
+        heap = [(n.last_used, id(n), n) for n in self._walk()
+                if not n.children
+                and self.pool.refcount[n.block] == 1]
+        heapq.heapify(heap)
+        while freed < need and heap:
+            _, _, victim = heapq.heappop(heap)
+            parent = victim.parent
+            del parent.children[victim.tokens]
             self.pool._decref(victim.block)
             freed += 1
+            if (parent is not self.root and not parent.children
+                    and self.pool.refcount[parent.block] == 1):
+                heapq.heappush(
+                    heap, (parent.last_used, id(parent), parent))
         return freed
 
     def _walk(self):
@@ -474,15 +489,23 @@ class PagedKVCache:
         share for `prompt`)."""
         if not self.chunked:   # solo splice reserves the whole slot
             return self.blocks_per_slot <= len(self._free_blocks)
-        shared_full = 0
+        shared_full, pinned = 0, ()
         if self.prefix is not None and prompt is not None:
             matched, chain = self.prefix.match(prompt)
             hit = min(matched, prompt_len - 1)
             shared_full = hit // self.block
+            # the blocks `begin` will pin (shared full blocks + the COW
+            # source boundary block) must not be counted as evictable —
+            # `need` already assumes they survive, so freeing them to
+            # satisfy the reservation would both lose the hit and alias
+            # pool blocks (the corruption `begin`'s pin now prevents)
+            n_pin = shared_full + (1 if hit > shared_full * self.block
+                                   else 0)
+            pinned = chain[:n_pin]
         need = self.blocks_needed(prompt_len, max_new, shared_full)
         avail = len(self._free_blocks)
         if self.prefix is not None and need > avail:
-            avail += self.prefix.evictable()
+            avail += self.prefix.evictable(exclude=pinned)
         return need <= avail
 
     def _ensure_free(self, need: int) -> None:
@@ -517,27 +540,41 @@ class PagedKVCache:
         n_keep = hit // self.block         # fully-shared, read-only
         total = -(-(plen + max_new) // self.block)
         fresh_n = total - n_keep
-        self._ensure_free(fresh_n)
+        # Pin the matched chain BEFORE eviction can run: the shared
+        # full blocks and the COW-source boundary block may be
+        # cache-only (refcount 1), and `_ensure_free` → `evict` would
+        # otherwise free them and `_alloc_block` could hand the same
+        # pool block back as one of this request's fresh write targets
+        # — one block at two table indices, so decode writes would
+        # silently corrupt the shared prefix this row reads. The extra
+        # refcount takes them out of the evictable set.
+        cow_src = chain[n_keep] if hit > n_keep * self.block else None
+        pinned = list(chain[:n_keep])
+        if cow_src is not None:
+            pinned.append(cow_src)
+        for b in pinned:
+            self._incref(b)
+        try:
+            self._ensure_free(fresh_n)
+        except BaseException:
+            for b in pinned:
+                self._decref(b)
+            raise
         fresh = [self._alloc_block() for _ in range(fresh_n)]
         row = np.zeros(self.blocks_per_slot, np.int32)
-        for i, b in enumerate(chain[:n_keep]):
-            self._incref(b)
-            row[i] = b
+        # the pin on chain[:n_keep] becomes the table's refcount
+        row[:n_keep] = chain[:n_keep]
         row[n_keep:total] = fresh
-        if hit > n_keep * self.block:
+        if cow_src is not None:
             # the match ends inside chain[n_keep]: the tail prefill
             # writes into that block from position `hit`, so copy it
             # into the reservation first (COW — the cached chain keeps
-            # its original block untouched). Safe even if _ensure_free
-            # just LRU-evicted this very block: eviction only returns
-            # the id to the free list, the device bytes are intact, and
-            # nothing can write them before this copy (begin is atomic
-            # and the only writers are later decode steps).
-            src = chain[n_keep]
+            # its original block untouched), then drop its pin.
             self.cache = _copy_blocks_tree(
-                self.cache, jnp.asarray([src], jnp.int32),
+                self.cache, jnp.asarray([cow_src], jnp.int32),
                 jnp.asarray([int(fresh[0])], jnp.int32))
             self.cow_blocks += 1
+            self._decref(cow_src)
         self.tables[slot] = row
         self.nblocks[slot] = total
         self.lengths[slot] = hit

@@ -281,6 +281,80 @@ def test_eviction_under_pressure_and_structured_reject(setup):
     assert sched2.rejected == [big]
 
 
+def test_begin_pins_matched_chain_under_pressure(setup):
+    """Eviction inside ``begin`` must free OTHER chains, never the
+    chain the request is about to share: the matched blocks are pinned
+    before ``_ensure_free`` so they cannot be recycled as this
+    request's fresh write targets (one pool block at two table indices
+    would let decode writes corrupt the shared prefix)."""
+    cfg, params = setup
+    kv = PagedKVCache(cfg, params, 3, 16, block=4, num_blocks=7,
+                      prefix_cache=True, chunked=True)
+    p1 = np.arange(1, 9, dtype=np.int32)       # 2 full blocks
+    p2 = np.arange(50, 58, dtype=np.int32)     # disjoint, 2 full blocks
+    for p in (p1, p2):
+        s = kv.alloc()
+        kv.begin(s, p, max_new=4)
+        kv.lengths[s] = 12
+        kv.release(s)                          # caches 2 prompt blocks
+    assert kv.free_blocks == 2                 # 6 usable - 4 cached
+    matched, chain = kv.prefix.match(p1)
+    assert matched == 8 and len(chain) == 2
+    assert kv.can_admit(8, 8, p1)              # p2's chain is evictable
+    s = kv.alloc()
+    hit = kv.begin(s, p1, max_new=8)           # fresh 3 > free 2
+    assert hit == 7
+    row = kv.tables[s, :int(kv.nblocks[s])]
+    assert len(np.unique(row)) == len(row)     # no aliased pool block
+    assert row[0] == chain[0] and kv.refcount[chain[0]] == 2
+    assert chain[1] not in row                 # COW: boundary copied
+    m2, c2 = kv.prefix.match(p1)
+    assert m2 == 8 and c2 == chain             # matched chain survived
+
+
+def test_admission_holds_when_only_matched_chain_evictable(setup):
+    """``can_admit`` must not count the matched chain's cache-only
+    blocks as evictable headroom — ``need`` already assumes they
+    survive. When they are the only evictable blocks the request is
+    held, and a forced ``begin`` raises (pins rolled back) instead of
+    corrupting the pool."""
+    cfg, params = setup
+    kv = PagedKVCache(cfg, params, 2, 16, block=4, num_blocks=4,
+                      prefix_cache=True, chunked=True)
+    p = np.arange(1, 9, dtype=np.int32)
+    s = kv.alloc()
+    kv.begin(s, p, max_new=4)
+    kv.lengths[s] = 12
+    kv.release(s)                              # caches 2 prompt blocks
+    assert kv.free_blocks == 1
+    # needs 3 fresh blocks; only the chain it would share is evictable
+    assert not kv.can_admit(8, 8, p)
+    matched, chain = kv.prefix.match(p)
+    s2 = kv.alloc()
+    with pytest.raises(RuntimeError, match="exhausted"):
+        kv.begin(s2, p, max_new=8)
+    # pins rolled back: cached chain intact, unshared, nothing leaked
+    assert [int(kv.refcount[b]) for b in chain] == [1, 1]
+    assert kv.free_blocks == 1
+    assert kv.prefix.match(p)[1] == chain
+
+
+def test_evict_peels_whole_chains_lru(setup):
+    """A single ``evict`` call unwinds a cold chain back to front:
+    freeing a leaf exposes its parent within the same heap loop."""
+    kv = _pool(setup, num_slots=2, max_len=16, prefix_cache=True,
+               chunked=True)
+    p = np.arange(1, 13, dtype=np.int32)       # 3 full blocks
+    s = kv.alloc()
+    kv.begin(s, p, max_new=4)
+    kv.lengths[s] = 12
+    kv.release(s)
+    assert kv.used_blocks == 3
+    assert kv.prefix.evict(5) == 3
+    assert kv.used_blocks == 0
+    assert kv.prefix.evictable() == 0
+
+
 def test_costmodel_block_bytes_crosscheck(setup):
     cfg, params = setup
     for block in (4, 16):
